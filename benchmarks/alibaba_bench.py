@@ -1,0 +1,41 @@
+"""Paper Fig 10 + §5.7: Alibaba Cloud — OSS caps total storage bandwidth at
+10 Gb/s, which throttles storage-based designs as workers grow; HybridPS
+(VM-based sync) becomes the best baseline there, and FuncPipe still wins."""
+from __future__ import annotations
+
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import funcpipe, lambda_ml
+from repro.serverless.platform import ALIBABA_FC
+
+
+def rows(fast: bool = False):
+    out = []
+    models = ["amoebanet-d36"] if fast else ["resnet101", "amoebanet-d36"]
+    batches = [64] if fast else [64, 256]
+    for model in models:
+        prof = paper_model_profile(model, ALIBABA_FC)
+        for gb in batches:
+            lm = lambda_ml(prof, ALIBABA_FC, gb)
+            hp = lambda_ml(prof, ALIBABA_FC, gb, ps=True)
+            fp = funcpipe(prof, ALIBABA_FC, gb)
+            rec = fp.recommended_sim
+            best_base = min([x for x in (lm, hp) if x], key=lambda s: s.t_iter)
+            out.append({
+                "bench": "fig10", "model": model, "global_batch": gb,
+                "lambdaml_t": round(lm.t_iter, 2) if lm else None,
+                "hybridps_t": round(hp.t_iter, 2) if hp else None,
+                "funcpipe_t": round(rec.t_iter, 2),
+                "funcpipe_c": round(rec.cost, 5),
+                "speedup_vs_best_baseline": round(best_base.t_iter / rec.t_iter, 2),
+                "cost_red_vs_best": round(1 - min(s.cost for s in fp.sims) / best_base.cost, 3),
+            })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

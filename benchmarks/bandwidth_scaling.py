@@ -1,0 +1,44 @@
+"""Paper Fig 11 + §5.8: performance as function bandwidth grows 1x -> 20x.
+FuncPipe keeps an edge through optimized memory allocation even when the
+communication bottleneck disappears."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import funcpipe, lambda_ml
+from repro.serverless.platform import AWS_LAMBDA
+
+
+def rows(fast: bool = False):
+    out = []
+    models = ["amoebanet-d36"] if fast else ["resnet101", "amoebanet-d18",
+                                             "amoebanet-d36", "bert-large"]
+    scales = [1, 4, 20] if fast else [1, 2, 4, 8, 20]
+    for model in models:
+        for scale in scales:
+            platform = dataclasses.replace(
+                AWS_LAMBDA,
+                max_function_bandwidth=AWS_LAMBDA.max_function_bandwidth * scale,
+            )
+            prof = paper_model_profile(model, platform)
+            lm = lambda_ml(prof, platform, 64)
+            fp = funcpipe(prof, platform, 64)
+            rec = fp.recommended_sim
+            out.append({
+                "bench": "fig11", "model": model, "bw_scale": scale,
+                "lambdaml_t": round(lm.t_iter, 2), "lambdaml_c": round(lm.cost, 5),
+                "funcpipe_t": round(rec.t_iter, 2), "funcpipe_c": round(rec.cost, 5),
+                "speedup": round(lm.t_iter / rec.t_iter, 2),
+                "cost_ratio": round(rec.cost / lm.cost, 2),
+            })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

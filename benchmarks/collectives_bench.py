@@ -1,0 +1,33 @@
+"""Uni- vs bi-directional ring collectives: analytic bytes-on-link / steps
+(the TPU analog of eq (1) vs eq (2)) plus HLO op counts from a tiny lowering."""
+from __future__ import annotations
+
+from repro.core import collectives as cc
+
+
+def rows(fast: bool = False):
+    out = []
+    for nbytes, label in [(1e9, "1GB"), (280e6, "280MB(paper)")]:
+        for d in [2, 4, 8, 16]:
+            uni = cc.reduce_scatter_cost(nbytes, d, False)
+            bi = cc.reduce_scatter_cost(nbytes, d, True)
+            ar_uni = cc.all_reduce_cost(nbytes, d, False)
+            ar_bi = cc.all_reduce_cost(nbytes, d, True)
+            out.append({
+                "bench": "ring_analytic", "payload": label, "d": d,
+                "rs_uni_MB_link": round(uni.bytes_on_link / 1e6, 1),
+                "rs_bi_MB_link": round(bi.bytes_on_link / 1e6, 1),
+                "link_reduction": round(1 - bi.bytes_on_link / uni.bytes_on_link, 3),
+                "ar_uni_ms@50GBps": round(ar_uni.bytes_on_link / 50e9 * 1e3, 3),
+                "ar_bi_ms@50GBps": round(ar_bi.bytes_on_link / 50e9 * 1e3, 3),
+            })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig 9 + §5.6: co-optimization vs TPDMP-style and Bayes-style
+algorithms — training time/cost of the found configs and solver runtime."""
+from __future__ import annotations
+
+import time
+
+from repro.core import planner
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import ALPHA_PAIRS
+from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.simulator import simulate_funcpipe
+
+
+def rows(fast: bool = False):
+    out = []
+    models = ["amoebanet-d18"] if fast else ["resnet101", "amoebanet-d18",
+                                             "amoebanet-d36", "bert-large"]
+    alphas = ALPHA_PAIRS[1:3] if fast else ALPHA_PAIRS
+    M = 16  # global batch 64, micro-batch 4 (paper Fig 9 uses gb 64)
+    for model in models:
+        prof = paper_model_profile(model, AWS_LAMBDA)
+        for alpha in alphas:
+            kw = dict(alpha=alpha, total_micro_batches=M, merge_to=8)
+            for name, fn in [
+                ("funcpipe", planner.solve),
+                ("tpdmp", planner.tpdmp_solve),
+                ("bayes", lambda *a, **k: planner.bayes_solve(*a, rounds=100, seed=0, **k)),
+            ]:
+                t0 = time.time()
+                r = fn(prof, AWS_LAMBDA, **kw)
+                dt = time.time() - t0
+                if r is None:
+                    out.append({"bench": "fig9", "model": model, "alpha2": alpha[1],
+                                "algo": name, "status": "infeasible"})
+                    continue
+                sim = simulate_funcpipe(r.profile, AWS_LAMBDA, r.config, M)
+                out.append({
+                    "bench": "fig9", "model": model, "alpha2": alpha[1],
+                    "algo": name, "t_iter": round(sim.t_iter, 2),
+                    "cost": round(sim.cost, 5),
+                    "objective": round(r.objective, 6),
+                    "solve_s": round(dt, 2),
+                })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paper Fig 5: overall time/cost vs serverless baselines, 4 models x 3
+global batch sizes, on the AWS-Lambda platform model."""
+from __future__ import annotations
+
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import funcpipe, lambda_ml
+from repro.serverless.platform import AWS_LAMBDA
+
+MODELS = ["resnet101", "amoebanet-d18", "amoebanet-d36", "bert-large"]
+
+
+def rows(fast: bool = False):
+    out = []
+    models = MODELS[1:3] if fast else MODELS
+    batches = [64] if fast else [16, 64, 256]
+    for model in models:
+        prof = paper_model_profile(model, AWS_LAMBDA)
+        for gb in batches:
+            lm = lambda_ml(prof, AWS_LAMBDA, gb)
+            hp = lambda_ml(prof, AWS_LAMBDA, gb, ps=True)
+            lma = lambda_ml(prof, AWS_LAMBDA, gb, grad_accum=True)
+            hpa = lambda_ml(prof, AWS_LAMBDA, gb, grad_accum=True, ps=True)
+            fp = funcpipe(prof, AWS_LAMBDA, gb)
+            rec = fp.recommended_sim
+            cheapest = min(fp.sims, key=lambda s: s.cost)
+            out.append({
+                "bench": "fig5", "model": model, "global_batch": gb,
+                "lambdaml_t": round(lm.t_iter, 2), "lambdaml_c": round(lm.cost, 5),
+                "hybridps_t": round(hp.t_iter, 2), "hybridps_c": round(hp.cost, 5),
+                "lambdaml_ga_t": round(lma.t_iter, 2) if lma else None,
+                "hybridps_ga_t": round(hpa.t_iter, 2) if hpa else None,
+                "funcpipe_rec_t": round(rec.t_iter, 2),
+                "funcpipe_rec_c": round(rec.cost, 5),
+                "funcpipe_min_c": round(cheapest.cost, 5),
+                "speedup_vs_lambdaml": round(lm.t_iter / rec.t_iter, 2),
+                "cost_red_vs_lambdaml": round(1 - cheapest.cost / lm.cost, 3),
+                "pareto_points": len(fp.sims),
+            })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

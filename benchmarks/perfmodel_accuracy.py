@@ -1,0 +1,54 @@
+"""Paper Table 3 analog: performance-model prediction error, measured against
+the independent discrete-event simulator (the offline stand-in for the real
+testbed; the paper reports ~11% mean error)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import planner
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import ALPHA_PAIRS
+from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.simulator import simulate_funcpipe
+
+MODELS = ["resnet101", "amoebanet-d18", "amoebanet-d36", "bert-large"]
+
+
+def rows(fast: bool = False):
+    out = []
+    models = MODELS[:2] if fast else MODELS
+    batches = [64] if fast else [16, 64, 256]
+    errs_all = []
+    for model in models:
+        prof = paper_model_profile(model, AWS_LAMBDA)
+        errs = []
+        for gb in batches:
+            M = gb // 4
+            for alpha in (ALPHA_PAIRS[1:2] if fast else ALPHA_PAIRS):
+                r = planner.solve(prof, AWS_LAMBDA, alpha=alpha,
+                                  total_micro_batches=M, merge_to=8)
+                if r is None:
+                    continue
+                sim = simulate_funcpipe(r.profile, AWS_LAMBDA, r.config, M)
+                errs.append(abs(r.evaluation.t_iter - sim.t_iter) / sim.t_iter)
+        errs_all += errs
+        out.append({
+            "bench": "table3", "model": model,
+            "mean_err": round(float(np.mean(errs)), 4),
+            "max_err": round(float(np.max(errs)), 4),
+            "n": len(errs),
+        })
+    out.append({"bench": "table3", "model": "AVERAGE",
+                "mean_err": round(float(np.mean(errs_all)), 4),
+                "max_err": round(float(np.max(errs_all)), 4),
+                "n": len(errs_all)})
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

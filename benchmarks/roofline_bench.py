@@ -1,0 +1,52 @@
+"""Deliverable (g): roofline table from the dry-run artifacts.
+
+Reads benchmarks/results/dryrun/*.json (produced by repro.launch.dryrun) and
+prints the three roofline terms, dominant bottleneck, MODEL_FLOPS ratio and
+peak memory per (arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def rows(fast: bool = False):
+    out = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        r = json.load(open(path))
+        if r["status"] == "skip":
+            out.append({"bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+                        "status": "skip", "reason": r["reason"][:48]})
+            continue
+        if r["status"] != "ok":
+            out.append({"bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+                        "status": "FAIL"})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "mesh": r["mesh"], "status": "ok",
+            "t_compute_ms": round(rf["t_compute_s"] * 1e3, 2),
+            "t_memory_ms": round(rf["t_memory_s"] * 1e3, 2),
+            "t_collective_ms": round(rf["t_collective_s"] * 1e3, 2),
+            "bottleneck": rf["bottleneck"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 3)
+            if r.get("useful_flops_ratio") else None,
+            "peak_gb": round(r["memory"]["peak_bytes"] / 2**30, 2)
+            if r["memory"]["peak_bytes"] else None,
+            "hlo_coll_kinds": ";".join(
+                f"{k}:{v}" for k, v in sorted(r["roofline_hlo"]["collective_counts"].items())
+            ),
+        })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

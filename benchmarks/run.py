@@ -1,0 +1,85 @@
+"""Benchmark aggregator — one module per paper table/figure (see DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV per the harness convention: each row
+times its benchmark module and carries the module's headline derived metric.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _headline(name: str, rows: list) -> str:
+    if name == "scatter_reduce":
+        r = [x for x in rows if x["bench"] == "fig8_training"]
+        return f"max_sync_reduction={max(x['sync_reduction'] for x in r)}"
+    if name == "overall_perf":
+        sp = [x["speedup_vs_lambdaml"] for x in rows]
+        return f"speedup_range={min(sp)}-{max(sp)}x"
+    if name == "scaling":
+        return f"max_tp_gain={max(x['tp_gain'] for x in rows)}"
+    if name == "coopt":
+        ours = [x for x in rows if x.get("algo") == "funcpipe" and "objective" in x]
+        return f"funcpipe_solves={len(ours)}"
+    if name == "bandwidth_scaling":
+        r20 = [x for x in rows if x["bw_scale"] == max(y["bw_scale"] for y in rows)]
+        return f"speedup_at_max_bw={r20[0]['speedup']}"
+    if name == "perfmodel_accuracy":
+        avg = [x for x in rows if x["model"] == "AVERAGE"]
+        return f"mean_err={avg[0]['mean_err']}" if avg else "n/a"
+    if name == "roofline":
+        ok = [x for x in rows if x.get("status") == "ok"]
+        skip = [x for x in rows if x.get("status") == "skip"]
+        return f"lowered={len(ok)};skips={len(skip)}"
+    if name == "alibaba":
+        return f"max_speedup={max(x['speedup_vs_best_baseline'] for x in rows)}"
+    if name == "collectives":
+        return f"bidi_link_reduction={rows[0]['link_reduction']}"
+    return f"rows={len(rows)}"
+
+
+def main() -> None:
+    fast = "--fast" in sys.argv
+    from benchmarks import (
+        alibaba_bench,
+        bandwidth_scaling,
+        collectives_bench,
+        coopt_bench,
+        overall_perf,
+        perfmodel_accuracy,
+        roofline_bench,
+        scaling,
+        scatter_reduce_bench,
+    )
+
+    benches = [
+        ("scatter_reduce", scatter_reduce_bench),     # §3.3 + Fig 8
+        ("overall_perf", overall_perf),               # Fig 5
+        ("scaling", scaling),                         # Fig 7
+        ("coopt", coopt_bench),                       # Fig 9
+        ("bandwidth_scaling", bandwidth_scaling),     # Fig 11
+        ("alibaba", alibaba_bench),                   # Fig 10 / §5.7
+        ("perfmodel_accuracy", perfmodel_accuracy),   # Table 3
+        ("roofline", roofline_bench),                 # deliverable (g)
+        ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
+    ]
+    print("name,us_per_call,derived")
+    all_rows = {}
+    for name, mod in benches:
+        t0 = time.time()
+        rows = mod.rows(fast=fast)
+        dt = (time.time() - t0) * 1e6 / max(1, len(rows))
+        all_rows[name] = rows
+        print(f"{name},{dt:.0f},{_headline(name, rows)}")
+    print()
+    for name, rows in all_rows.items():
+        print(f"## {name}")
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()))
+        print()
+
+
+if __name__ == "__main__":
+    main()

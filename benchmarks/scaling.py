@@ -1,0 +1,41 @@
+"""Paper Fig 7: throughput scaling with total memory (FuncPipe vs LambdaML),
+with the per-worker bandwidth-contention model enabled."""
+from __future__ import annotations
+
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import funcpipe, lambda_ml
+from repro.serverless.platform import AWS_LAMBDA
+
+
+def rows(fast: bool = False):
+    out = []
+    models = ["amoebanet-d18"] if fast else ["amoebanet-d18", "amoebanet-d36"]
+    for model in models:
+        prof = paper_model_profile(model, AWS_LAMBDA)
+        base_tp = None
+        for gb in [32, 64, 128, 256] if not fast else [32, 128]:
+            lm = lambda_ml(prof, AWS_LAMBDA, gb, contention=True)
+            fp = funcpipe(prof, AWS_LAMBDA, gb, contention=True)
+            rec = fp.recommended_sim
+            lm_tp = gb / lm.t_iter
+            fp_tp = gb / rec.t_iter
+            if base_tp is None:
+                base_tp = lm_tp
+            out.append({
+                "bench": "fig7", "model": model, "global_batch": gb,
+                "lambdaml_mem_gb": round(lm.total_mem_gb, 1),
+                "funcpipe_mem_gb": round(rec.total_mem_gb, 1),
+                "lambdaml_tp_norm": round(lm_tp / base_tp, 2),
+                "funcpipe_tp_norm": round(fp_tp / base_tp, 2),
+                "tp_gain": round(fp_tp / lm_tp, 2),
+            })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

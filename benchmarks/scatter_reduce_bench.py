@@ -1,0 +1,56 @@
+"""Paper §3.3 + Fig 8: pipelined vs non-pipelined scatter-reduce.
+
+Reports (a) the analytic eq (1)/(2) times including the 280MB/8-worker
+example, (b) simulated training sync time & throughput vs DP degree on the
+AmoebaNet-D18 recommended 3-stage config (the paper's Fig 8 setup).
+"""
+from __future__ import annotations
+
+from repro.core.perfmodel import sync_time_nonpipelined, sync_time_pipelined
+from repro.core.profiler import paper_model_profile
+from repro.core.partition import merge_layers
+from repro.core.perfmodel import Config
+from repro.serverless.platform import AWS_LAMBDA, MB
+from repro.serverless.simulator import simulate_funcpipe
+
+
+def rows(fast: bool = False):
+    out = []
+    # ---- eq (1) vs eq (2) (paper's worked example)
+    s, w = 280 * MB, 70 * MB
+    for n in [2, 4, 8, 16, 32]:
+        t1 = sync_time_nonpipelined(s, w, n, 0.040)
+        t2 = sync_time_pipelined(s, w, n, 0.040)
+        out.append({
+            "bench": "eq1_vs_eq2", "n_workers": n,
+            "nonpipelined_s": round(t1, 3), "pipelined_s": round(t2, 3),
+            "reduction": round(1 - t2 / t1, 3),
+        })
+    # ---- Fig 8: training with the 3-stage AmoebaNet-D18 plan, growing DP
+    prof = merge_layers(paper_model_profile("amoebanet-d18", AWS_LAMBDA), 6)
+    L = prof.L
+    x = tuple(1 if i in (L // 3 - 1, 2 * L // 3 - 1) else 0 for i in range(L - 1))
+    z = tuple([6] * L)
+    for d in [2, 4, 8, 16, 32]:
+        M = 8 * d  # global batch grows with DP (paper Fig 8)
+        a = simulate_funcpipe(prof, AWS_LAMBDA, Config(x=x, d=d, z=z), M,
+                              pipelined_sync=False, contention=True)
+        b = simulate_funcpipe(prof, AWS_LAMBDA, Config(x=x, d=d, z=z), M,
+                              pipelined_sync=True, contention=True)
+        out.append({
+            "bench": "fig8_training", "dp": d,
+            "sync_nonpipelined_s": round(a.breakdown["sync"], 2),
+            "sync_pipelined_s": round(b.breakdown["sync"], 2),
+            "sync_reduction": round(1 - b.breakdown["sync"] / a.breakdown["sync"], 3),
+            "iter_speedup": round(a.t_iter / b.t_iter, 3),
+        })
+    return out
+
+
+def main(fast: bool = False):
+    for r in rows(fast):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Checkpointing — the Function Manager's checkpoint/restart analog (§3.1 ⑧).
+
+Serverless functions time out (15 min on Lambda); the paper's Function
+Manager checkpoints to storage and relaunches workers.  On a pod the same
+mechanism is ordinary periodic checkpointing; we serialize the param/opt
+pytrees with msgpack (structure) + raw npy buffers.
+"""
+from __future__ import annotations
+
+import io
+import os
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    leaves, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    payload = {
+        "step": step,
+        "treedef": str(treedef),
+        "leaves": [],
+    }
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        buf = io.BytesIO()
+        np.save(buf, arr, allow_pickle=False)
+        payload["leaves"].append(buf.getvalue())
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)
+
+
+def restore_checkpoint(path: str, like: Any) -> tuple[Any, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes asserted)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = _flatten(like)
+    assert len(payload["leaves"]) == len(leaves), "checkpoint structure mismatch"
+    out = []
+    for blob, ref in zip(payload["leaves"], leaves):
+        arr = np.load(io.BytesIO(blob), allow_pickle=False)
+        ref_arr = np.asarray(ref) if not hasattr(ref, "shape") else ref
+        assert tuple(arr.shape) == tuple(ref_arr.shape), (arr.shape, ref_arr.shape)
+        out.append(jnp.asarray(arr, dtype=ref_arr.dtype))
+    return jax.tree.unflatten(treedef, out), int(payload["step"])
+
+
+class FunctionManager:
+    """Periodic checkpoint/restart policy: checkpoints whenever the elapsed
+    'function lifetime' budget is nearly exhausted (the paper restarts
+    workers before the 15-minute Lambda timeout)."""
+
+    def __init__(self, path: str, *, lifetime: float = 15 * 60.0,
+                 safety: float = 0.9):
+        self.path = path
+        self.lifetime = lifetime
+        self.safety = safety
+        self.started = time.monotonic()
+        self.restarts = 0
+
+    def should_checkpoint(self) -> bool:
+        return (time.monotonic() - self.started) >= self.lifetime * self.safety
+
+    def checkpoint_and_restart(self, tree: Any, step: int) -> None:
+        save_checkpoint(self.path, tree, step=step)
+        self.started = time.monotonic()  # simulated relaunch
+        self.restarts += 1

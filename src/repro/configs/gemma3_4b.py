@@ -1,0 +1,29 @@
+"""gemma3-4b  [dense]  — 5:1 local:global attention, 128k ctx  [hf:google/gemma-3-1b-pt]
+
+Period of 6: five sliding-window (1024) layers then one global layer.  The
+sliding window makes ``long_500k`` feasible: local layers keep a rolling
+window cache; the 1-in-6 global layers shard their 500k KV over the data axis
+with partial-softmax combination.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, GLOBAL_WINDOW
+
+LOCAL = LayerSpec(window=1024)
+GLOBAL = LayerSpec(window=GLOBAL_WINDOW)
+
+CONFIG = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    citation="hf:google/gemma-3-1b-pt",
+    n_layers=34,  # 5 full periods of 6 + a truncated one (runtime masks layers >= 34)
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=10240,
+    vocab_size=262144,
+    period=(LOCAL, LOCAL, LOCAL, LOCAL, LOCAL, GLOBAL),
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    stages=2,  # 6 periods -> 3 periods/stage; tensor=8
+    tensor=8,
+)

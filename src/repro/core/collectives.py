@@ -1,0 +1,163 @@
+"""Ring collectives — the TPU mapping of the paper's storage-based
+scatter-reduce (§3.3).
+
+The paper's insight is that LambdaML's 3-phase scatter-reduce leaves the
+uplink idle while downloading and vice versa (eq (1): 3s/w − 2s/(nw)); its
+pipelined schedule drives both directions at once (eq (2): 2s/w).  On a TPU
+torus the same resource exists natively: each ICI link is full duplex.  A
+*unidirectional* ring reduce-scatter/all-gather (the LambdaML-equivalent
+baseline) moves N(D−1)/D bytes through one direction serially; the
+*bidirectional* ring splits every chunk in half and runs two opposing rings
+concurrently, halving wall-clock steps exactly as eq (1)→eq (2) halves
+storage round-trips.
+
+These functions run *inside shard_map* and operate on gradients/parameters
+outside of AD (ZeRO-style sync), so no custom_vjp is required; the in-graph
+collectives (psum / ppermute / all_to_all) carry their own transpose rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ----------------------------------------------------------------- mesh groups
+def tp_groups(stages: int, tp: int) -> list[list[int]]:
+    """Sub-groups of the 'model' axis: device m = stage*tp + t."""
+    return [[s * tp + t for t in range(tp)] for s in range(stages)]
+
+
+def stage_peers(stages: int, tp: int) -> list[list[int]]:
+    """Groups of devices holding the same tp slice across stages."""
+    return [[s * tp + t for s in range(stages)] for t in range(tp)]
+
+
+def pipeline_perm(stages: int, tp: int) -> list[tuple[int, int]]:
+    """(src, dst) pairs moving activations stage s -> s+1 (no wraparound)."""
+    return [
+        (s * tp + t, (s + 1) * tp + t)
+        for s in range(stages - 1)
+        for t in range(tp)
+    ]
+
+
+# ------------------------------------------------------------- ring primitives
+def _take_chunk(chunks: jax.Array, i) -> jax.Array:
+    """chunks [D, c, ...]; dynamic index i."""
+    return jax.lax.dynamic_index_in_dim(chunks, i, axis=0, keepdims=False)
+
+
+def _ring_reduce_scatter_1d(
+    x: jax.Array, axis_name: str, *, reverse: bool = False
+) -> jax.Array:
+    """x local [D*c, ...] -> reduced chunk [c, ...] (device i owns chunk i).
+
+    Rightward ring (reverse=False): packet for chunk i starts at device i+1
+    and arrives at i after D-1 hops, each hop adding the local copy.
+    """
+    D = lax.axis_size(axis_name)
+    if D == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    assert x.shape[0] % D == 0
+    chunks = x.reshape(D, x.shape[0] // D, *x.shape[1:])
+    sgn = -1 if reverse else 1
+    perm = [(i, (i + sgn) % D) for i in range(D)]
+    buf = _take_chunk(chunks, (idx - sgn) % D)
+    for s in range(D - 1):
+        buf = lax.ppermute(buf, axis_name, perm)
+        buf = buf + _take_chunk(chunks, (idx - sgn * (2 + s)) % D)
+    return buf
+
+
+def _ring_all_gather_1d(
+    x: jax.Array, axis_name: str, *, reverse: bool = False
+) -> jax.Array:
+    """x local chunk [c, ...] -> gathered [D*c, ...] in global order."""
+    D = lax.axis_size(axis_name)
+    if D == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    sgn = -1 if reverse else 1
+    # receive from the 'next' device: after k steps we hold chunk idx + k*sgn
+    perm = [((i + sgn) % D, i) for i in range(D)]
+    out = jnp.zeros((D, *x.shape), x.dtype)
+    out = lax.dynamic_update_index_in_dim(out, x, idx, axis=0)
+    cur = x
+    for k in range(1, D):
+        cur = lax.ppermute(cur, axis_name, perm)
+        out = lax.dynamic_update_index_in_dim(out, cur, (idx + sgn * k) % D, axis=0)
+    return out.reshape(D * x.shape[0], *x.shape[1:])
+
+
+def ring_reduce_scatter(
+    x: jax.Array, axis_name: str, *, bidirectional: bool = True
+) -> jax.Array:
+    """Reduce-scatter along ``axis_name``; leading dim divided by axis size.
+    Device i receives the canonical chunk x[i*c:(i+1)*c] summed over devices.
+
+    bidirectional=True is the FuncPipe-analog schedule: each half of every
+    chunk travels in the opposite ring direction in the same step, so both
+    link directions carry payload (wall steps ~ halved).  False = the
+    LambdaML-equivalent single-direction ring.  Both produce the SAME
+    canonical chunk layout (each chunk is split within its leading dim).
+    """
+    D = lax.axis_size(axis_name)
+    if D == 1:
+        return x
+    c = x.shape[0] // D
+    if not bidirectional or c % 2 != 0:
+        return _ring_reduce_scatter_1d(x, axis_name)
+    chunks = x.reshape(D, c, *x.shape[1:])
+    lo = chunks[:, : c // 2].reshape(D * c // 2, *x.shape[1:])
+    hi = chunks[:, c // 2 :].reshape(D * c // 2, *x.shape[1:])
+    a = _ring_reduce_scatter_1d(lo, axis_name, reverse=False)
+    b = _ring_reduce_scatter_1d(hi, axis_name, reverse=True)
+    return jnp.concatenate([a, b], axis=0)
+
+
+def ring_all_gather(
+    x: jax.Array, axis_name: str, *, bidirectional: bool = True
+) -> jax.Array:
+    """All-gather along ``axis_name``; leading dim multiplied by axis size.
+    Canonical layout: output[i*c:(i+1)*c] == device i's input."""
+    D = lax.axis_size(axis_name)
+    if D == 1:
+        return x
+    c = x.shape[0]
+    if not bidirectional or c % 2 != 0:
+        return _ring_all_gather_1d(x, axis_name)
+    a = _ring_all_gather_1d(x[: c // 2], axis_name, reverse=False)   # [D*c/2,...]
+    b = _ring_all_gather_1d(x[c // 2 :], axis_name, reverse=True)
+    a = a.reshape(D, c // 2, *x.shape[1:])
+    b = b.reshape(D, c // 2, *x.shape[1:])
+    return jnp.concatenate([a, b], axis=1).reshape(D * c, *x.shape[1:])
+
+
+# ------------------------------------------------------------ analytic timing
+@dataclasses.dataclass(frozen=True)
+class CollectiveCost:
+    bytes_on_link: float   # bytes through the busiest link direction
+    steps: int             # ring steps (latency term)
+
+
+def reduce_scatter_cost(nbytes: float, d: int, bidirectional: bool) -> CollectiveCost:
+    if d <= 1:
+        return CollectiveCost(0.0, 0)
+    per_dir = nbytes * (d - 1) / d
+    if bidirectional:
+        return CollectiveCost(per_dir / 2, d - 1)
+    return CollectiveCost(per_dir, d - 1)
+
+
+def all_gather_cost(nbytes: float, d: int, bidirectional: bool) -> CollectiveCost:
+    return reduce_scatter_cost(nbytes, d, bidirectional)
+
+
+def all_reduce_cost(nbytes: float, d: int, bidirectional: bool) -> CollectiveCost:
+    rs = reduce_scatter_cost(nbytes, d, bidirectional)
+    return CollectiveCost(rs.bytes_on_link * 2, rs.steps * 2)

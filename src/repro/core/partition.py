@@ -1,0 +1,148 @@
+"""Partition utilities: the paper's hat/tilde accumulation operators (eq (4))
+and the layer-merging pass (§4 "MIQP solution") that keeps the optimization
+problem minute-scale.
+
+A *partition* is represented by the boundary vector x ∈ {0,1}^(L-1):
+x[i] == 1 iff the model is cut between layer i and i+1 (0-indexed; the paper's
+x_i "partitioned after layer i").  Stages are the contiguous runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+
+def hat(u: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Forward accumulation within partitions: hat_u[i] = u[i] + hat_u[i-1]*(1-x[i-1])."""
+    u = np.asarray(u, dtype=np.float64)
+    out = np.zeros_like(u)
+    out[0] = u[0]
+    for i in range(1, len(u)):
+        out[i] = u[i] + out[i - 1] * (1 - x[i - 1])
+    return out
+
+
+def tilde(u: np.ndarray, x: np.ndarray) -> np.ndarray:
+    """Backward accumulation: tilde_u[i] = u[i] + tilde_u[i+1]*(1-x[i])."""
+    u = np.asarray(u, dtype=np.float64)
+    L = len(u)
+    out = np.zeros_like(u)
+    out[L - 1] = u[L - 1]
+    for i in range(L - 2, -1, -1):
+        out[i] = u[i] + out[i + 1] * (1 - x[i])
+    return out
+
+
+def stages_of(x: Sequence[int]) -> List[Tuple[int, int]]:
+    """[(lo, hi)] inclusive layer ranges of each stage."""
+    lo = 0
+    out = []
+    for i, xi in enumerate(x):
+        if xi:
+            out.append((lo, i))
+            lo = i + 1
+    out.append((lo, len(x)))
+    return out
+
+
+def highest_layers(x: Sequence[int]) -> List[int]:
+    """The paper's H: last layer index of each stage."""
+    return [hi for _, hi in stages_of(x)]
+
+
+def lowest_layers(x: Sequence[int]) -> List[int]:
+    return [lo for lo, _ in stages_of(x)]
+
+
+# ------------------------------------------------------------------ profiles
+@dataclass(frozen=True)
+class LayerProfile:
+    """Per-layer quantities (paper Table 2).  Sizes in bytes, times in
+    seconds, indexed by memory option j for the compute times."""
+
+    name: str
+    param_bytes: float          # s_i
+    act_bytes: float            # a_i  (per micro-batch)
+    out_bytes: float            # o_i  (per micro-batch)
+    grad_out_bytes: float       # g_i  (per micro-batch, bwd boundary)
+    fwd_time: Tuple[float, ...]   # T_fc^{i,j}
+    bwd_time: Tuple[float, ...]   # T_bc^{i,j}
+
+
+@dataclass(frozen=True)
+class ModelProfile:
+    name: str
+    layers: Tuple[LayerProfile, ...]
+
+    @property
+    def L(self) -> int:
+        return len(self.layers)
+
+    def arrays(self):
+        ls = self.layers
+        return {
+            "s": np.array([l.param_bytes for l in ls]),
+            "a": np.array([l.act_bytes for l in ls]),
+            "o": np.array([l.out_bytes for l in ls]),
+            "g": np.array([l.grad_out_bytes for l in ls]),
+            "Tf": np.array([l.fwd_time for l in ls]),   # [L, J]
+            "Tb": np.array([l.bwd_time for l in ls]),
+        }
+
+    @property
+    def param_bytes(self) -> float:
+        return float(sum(l.param_bytes for l in self.layers))
+
+
+def merge_layers(profile: ModelProfile, target_L: int,
+                 criterion: str = "compute") -> ModelProfile:
+    """Greedy balanced merging (paper §4): contiguous layers are merged so the
+    chosen criterion (compute time / param size / activation size) is roughly
+    balanced across the ``target_L`` merged super-layers."""
+    ls = profile.layers
+    if len(ls) <= target_L:
+        return profile
+    if criterion == "compute":
+        w = np.array([np.mean(l.fwd_time) + np.mean(l.bwd_time) for l in ls])
+    elif criterion == "param":
+        w = np.array([l.param_bytes for l in ls])
+    elif criterion == "activation":
+        w = np.array([l.act_bytes for l in ls])
+    else:
+        raise ValueError(criterion)
+    w = np.maximum(w, 1e-12)
+    total = w.sum()
+    per = total / target_L
+    groups: List[List[int]] = []
+    cur: List[int] = []
+    acc = 0.0
+    remaining_groups = target_L
+    for i in range(len(ls)):
+        cur.append(i)
+        acc += w[i]
+        remaining_layers = len(ls) - i - 1
+        if (acc >= per and remaining_groups > 1 and remaining_layers >= remaining_groups - 1):
+            groups.append(cur)
+            cur = []
+            acc = 0.0
+            remaining_groups -= 1
+    if cur:
+        groups.append(cur)
+
+    def merge_group(idx: List[int]) -> LayerProfile:
+        sub = [ls[i] for i in idx]
+        J = len(sub[0].fwd_time)
+        return LayerProfile(
+            name=f"{sub[0].name}..{sub[-1].name}",
+            param_bytes=sum(l.param_bytes for l in sub),
+            act_bytes=sum(l.act_bytes for l in sub),
+            out_bytes=sub[-1].out_bytes,           # boundary output only
+            grad_out_bytes=sub[0].grad_out_bytes,  # boundary grad only
+            fwd_time=tuple(sum(l.fwd_time[j] for l in sub) for j in range(J)),
+            bwd_time=tuple(sum(l.bwd_time[j] for l in sub) for j in range(J)),
+        )
+
+    return ModelProfile(name=profile.name, layers=tuple(merge_group(g) for g in groups))

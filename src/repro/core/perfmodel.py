@@ -1,0 +1,155 @@
+"""The paper's performance model (§3.4.2 + Appendix A/B), term by term.
+
+Given a concrete configuration (partition x, data-parallel degree d, per-layer
+memory m_i) and a layer profile, computes the iteration time eq (7) and cost
+eq (6), the memory constraint eq (3b), and the synchronization times for both
+scatter-reduce algorithms — eq (1) (LambdaML, non-pipelined) and eq (2)
+(FuncPipe, pipelined).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.partition import (
+    ModelProfile,
+    hat,
+    highest_layers,
+    lowest_layers,
+    stages_of,
+    tilde,
+)
+from repro.serverless.platform import GB, Platform
+
+
+# --------------------------------------------------------------- sync times
+def sync_time_nonpipelined(s_grad: float, w: float, n: int, t_lat: float) -> float:
+    """Eq (1): LambdaML's 3-phase storage scatter-reduce."""
+    if n <= 1:
+        return 0.0
+    return 3 * s_grad / w - 2 * s_grad / (n * w) + 4 * t_lat
+
+
+def sync_time_pipelined(s_grad: float, w: float, n: int, t_lat: float) -> float:
+    """Eq (2): FuncPipe's full-duplex pipelined scatter-reduce."""
+    if n <= 1:
+        return 0.0
+    return 2 * s_grad / w + (2 + n) * t_lat
+
+
+@dataclass(frozen=True)
+class Config:
+    """A co-optimization decision: partition boundaries x (len L-1, {0,1}),
+    data-parallel degree d, and per-layer memory option index z (len L,
+    constant within a stage)."""
+
+    x: tuple
+    d: int
+    z: tuple  # memory option INDEX per layer
+
+    def mem(self, platform: Platform) -> np.ndarray:
+        return np.array([platform.memory_options[j] for j in self.z], dtype=np.float64)
+
+
+@dataclass(frozen=True)
+class Evaluation:
+    t_iter: float
+    c_iter: float
+    t_f: float
+    t_sync_max: float
+    mem_ok: bool
+    c_mem_gb: float
+
+    def objective(self, a1: float, a2: float) -> float:
+        return a1 * self.c_iter + a2 * self.t_iter
+
+
+def evaluate(
+    profile: ModelProfile,
+    platform: Platform,
+    config: Config,
+    total_micro_batches: int,
+    *,
+    pipelined_sync: bool = True,
+) -> Evaluation:
+    """Evaluate eq (3a)'s components for one configuration."""
+    arr = profile.arrays()
+    L = profile.L
+    x = np.asarray(config.x, dtype=np.int64)
+    assert len(x) == L - 1
+    d = config.d
+    m = config.mem(platform)
+    z = np.asarray(config.z)
+    mu = max(1, total_micro_batches // d)  # micro-batches per worker
+    beta = platform.contention_beta
+    t_lat = platform.storage_latency
+    W = np.array([platform.bandwidth(mo) for mo in platform.memory_options])
+
+    w_i = W[z]                                    # per-layer worker bandwidth
+    t_fc = beta * arr["Tf"][np.arange(L), z]      # forward compute per layer
+    t_bc = beta * arr["Tb"][np.arange(L), z]
+
+    xpad = np.concatenate([x, [0]])               # x_i defined for 1..L-1
+    # forward boundary comms (eq 8)
+    t_fu = np.zeros(L)
+    t_fd = np.zeros(L)
+    for i in range(L - 1):
+        if x[i]:
+            t_fu[i] = arr["o"][i] / w_i[i] + t_lat
+            t_fd[i] = arr["o"][i] / w_i[i + 1] + t_lat
+    # backward boundary comms (App. B)
+    t_bu = np.zeros(L)
+    t_bd = np.zeros(L)
+    for i in range(1, L):
+        if x[i - 1]:
+            t_bu[i] = arr["g"][i] / w_i[i] + t_lat
+            t_bd[i] = arr["g"][i] / w_i[i - 1] + t_lat
+
+    # ---- forward time
+    hat_tfc = hat(t_fc, x)
+    t_f0 = t_fc.sum() + t_fu.sum() + t_fd.sum()
+    delta_f = max(hat_tfc.max(), t_fu.max() if L > 1 else 0.0, t_fd.max() if L > 1 else 0.0)
+    t_f = t_f0 + (mu - 1) * delta_f
+
+    # ---- backward completion per partition-lowest layer (App. B)
+    tilde_tbc = tilde(t_bc, x)
+    lows = lowest_layers(x)
+    sync_fn = sync_time_pipelined if pipelined_sync else sync_time_nonpipelined
+    tilde_s = tilde(arr["s"], x)
+
+    worst = 0.0
+    t_sync_max = 0.0
+    for i in lows:
+        tb = t_bc[i:].sum() + t_bu[i + 1:].sum() + t_bd[i + 1:].sum()
+        db = max(tilde_tbc[i:].max(), t_bu[i + 1:].max() if i + 1 < L else 0.0,
+                 t_bd[i + 1:].max() if i + 1 < L else 0.0)
+        tb += (mu - 1) * db
+        ts = sync_fn(tilde_s[i], w_i[i], d, t_lat) if d > 1 else 0.0
+        t_sync_max = max(t_sync_max, ts)
+        worst = max(worst, tb + ts)
+
+    t_iter = t_f + worst
+
+    # ---- memory constraint (3b) and cost (5)/(6)
+    hat_a = hat(arr["a"], x)
+    hat_s = hat(arr["s"], x)
+    highs = highest_layers(x)
+    sync_mem_factor = 4 - 2 * (1 if d == 1 else 0)
+    mem_ok = all(
+        mu * hat_a[i] + hat_s[i] * sync_mem_factor + platform.base_memory <= m[i]
+        for i in highs
+    )
+    c_mem = d * sum(m[i] for i in highs)          # bytes across all workers
+    c_iter = platform.price_per_gb_s * (c_mem / GB) * t_iter
+
+    return Evaluation(
+        t_iter=float(t_iter),
+        c_iter=float(c_iter),
+        t_f=float(t_f),
+        t_sync_max=float(t_sync_max),
+        mem_ok=bool(mem_ok),
+        c_mem_gb=float(c_mem / GB),
+    )

@@ -1,0 +1,299 @@
+"""Co-optimization of model partition and resource allocation (paper §3.4).
+
+The paper linearizes the nonlinear binary program (3) to an MIQP and calls
+Gurobi.  No MIP solver ships offline, so we solve the *same formulation*
+with layer merging (paper §4) + exhaustive enumeration over (d, partition)
++ per-stage memory by coordinate descent from the min-feasible assignment —
+``method='exhaustive'`` cross-checks the heuristic on small instances (the
+tests assert they agree).
+
+Also implements the two comparison algorithms of §5.6:
+  * ``tpdmp_solve`` — throughput-maximizing partition under fixed resources,
+    grid-searched over resource allocations (TPDMP [63] adaptation);
+  * ``bayes_solve`` — black-box random/Bayesian-style search over the joint
+    space with the performance model as the evaluator (paper's Bayes setup).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.partition import ModelProfile, merge_layers, stages_of
+from repro.core.perfmodel import Config, Evaluation, evaluate
+from repro.serverless.platform import Platform
+
+DEFAULT_D_OPTIONS = (1, 2, 4, 8, 16)
+
+
+@dataclass(frozen=True)
+class PlanResult:
+    config: Config
+    evaluation: Evaluation
+    objective: float
+    solve_seconds: float
+    profile: ModelProfile  # (merged) profile the config indexes into
+
+
+def _expand_z(stage_mem: Sequence[int], x: Sequence[int], L: int) -> tuple:
+    z = []
+    s = 0
+    for i in range(L):
+        z.append(stage_mem[s])
+        if i < L - 1 and x[i]:
+            s += 1
+    return tuple(z)
+
+
+def _min_feasible_stage_mem(profile, platform, x, d, mu) -> Optional[List[int]]:
+    """Smallest memory option per stage satisfying eq (3b), else None."""
+    arr = profile.arrays()
+    opts = platform.memory_options
+    sync_f = 4 - 2 * (1 if d == 1 else 0)
+    out = []
+    for lo, hi in stages_of(x):
+        a = arr["a"][lo : hi + 1].sum()
+        s = arr["s"][lo : hi + 1].sum()
+        need = mu * a + s * sync_f + platform.base_memory
+        j = next((j for j, m in enumerate(opts) if m >= need), None)
+        if j is None:
+            return None
+        out.append(j)
+    return out
+
+
+def _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
+             start: List[int], floor: List[int], sweeps: int = 6):
+    J = len(platform.memory_options)
+    L = profile.L
+    stage_mem = list(start)
+    best_cfg = Config(x=tuple(x), d=d, z=_expand_z(stage_mem, x, L))
+    best = evaluate(profile, platform, best_cfg, mu * d, pipelined_sync=pipelined_sync)
+    if not best.mem_ok:
+        return None, None
+    best_obj = best.objective(a1, a2)
+    n_stages = len(stage_mem)
+    for _ in range(sweeps):
+        improved = False
+        for s in range(n_stages):
+            for j in range(floor[s], J):  # never below min-feasible
+                if j == stage_mem[s]:
+                    continue
+                trial = list(stage_mem)
+                trial[s] = j
+                cfg = Config(x=tuple(x), d=d, z=_expand_z(trial, x, L))
+                ev = evaluate(profile, platform, cfg, mu * d, pipelined_sync=pipelined_sync)
+                if ev.mem_ok and ev.objective(a1, a2) < best_obj:
+                    stage_mem, best_cfg, best, best_obj = trial, cfg, ev, ev.objective(a1, a2)
+                    improved = True
+        if not improved:
+            break
+    return best_cfg, best
+
+
+def _coordinate_descent(profile, platform, x, d, mu, a1, a2, pipelined_sync,
+                        init_mem: List[int], sweeps: int = 6):
+    """Multi-start coordinate descent on per-stage memory: starts from the
+    min-feasible assignment, the max assignment, and uniform levels — greedy
+    CD alone gets caught in neighbor-coupled local optima (upload/download
+    terms couple adjacent stages)."""
+    J = len(platform.memory_options)
+    n_stages = len(init_mem)
+    starts = [list(init_mem), [J - 1] * n_stages]
+    for j in range(J):
+        uniform = [max(j, f) for f in init_mem]
+        if uniform not in starts:
+            starts.append(uniform)
+    best_cfg, best_ev, best_obj = None, None, np.inf
+    for start in starts:
+        cfg, ev = _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
+                           start, init_mem, sweeps)
+        if cfg is None:
+            continue
+        obj = ev.objective(a1, a2)
+        if obj < best_obj:
+            best_cfg, best_ev, best_obj = cfg, ev, obj
+    if best_cfg is None:
+        return None, None
+    return best_cfg, best_ev
+
+
+def _partitions(L: int, max_stages: Optional[int] = None):
+    for bits in itertools.product((0, 1), repeat=L - 1):
+        if max_stages is not None and sum(bits) + 1 > max_stages:
+            continue
+        yield bits
+
+
+def solve(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    alpha: Tuple[float, float],
+    total_micro_batches: int,
+    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
+    merge_to: int = 10,
+    max_stages: Optional[int] = None,
+    method: str = "cd",
+    pipelined_sync: bool = True,
+) -> Optional[PlanResult]:
+    """FuncPipe's co-optimizer.  Returns the best feasible plan or None."""
+    t0 = time.time()
+    a1, a2 = alpha
+    prof = merge_layers(profile, merge_to)
+    L = prof.L
+    J = len(platform.memory_options)
+    best: Optional[PlanResult] = None
+    for d in d_options:
+        if total_micro_batches % d or total_micro_batches < d:
+            continue
+        mu = total_micro_batches // d
+        for x in _partitions(L, max_stages):
+            init = _min_feasible_stage_mem(prof, platform, x, d, mu)
+            if init is None:
+                continue
+            if method == "exhaustive":
+                n_stages = sum(x) + 1
+                best_cfg, best_ev, best_o = None, None, np.inf
+                for combo in itertools.product(range(J), repeat=n_stages):
+                    if any(c < i for c, i in zip(combo, init)):
+                        continue
+                    cfg = Config(x=tuple(x), d=d, z=_expand_z(list(combo), x, L))
+                    ev = evaluate(prof, platform, cfg, total_micro_batches,
+                                  pipelined_sync=pipelined_sync)
+                    if ev.mem_ok and ev.objective(a1, a2) < best_o:
+                        best_cfg, best_ev, best_o = cfg, ev, ev.objective(a1, a2)
+                cfg, ev = best_cfg, best_ev
+            else:
+                cfg, ev = _coordinate_descent(prof, platform, x, d, mu, a1, a2,
+                                              pipelined_sync, init)
+            if cfg is None:
+                continue
+            obj = ev.objective(a1, a2)
+            if best is None or obj < best.objective:
+                best = PlanResult(cfg, ev, obj, 0.0, prof)
+    if best is not None:
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+    return best
+
+
+# ------------------------------------------------------------------ baselines
+def tpdmp_solve(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    alpha: Tuple[float, float],
+    total_micro_batches: int,
+    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
+    merge_to: int = 10,
+    pipelined_sync: bool = True,
+) -> Optional[PlanResult]:
+    """Throughput-only partitioning (TPDMP-style) under a grid of fixed
+    resource allocations; the objective selects among grid points (§5.1)."""
+    t0 = time.time()
+    a1, a2 = alpha
+    prof = merge_layers(profile, merge_to)
+    L = prof.L
+    J = len(platform.memory_options)
+    best: Optional[PlanResult] = None
+    for d in d_options:
+        if total_micro_batches % d or total_micro_batches < d:
+            continue
+        mu = total_micro_batches // d
+        for j in range(J):  # uniform memory grid
+            best_t, best_cfg, best_ev = np.inf, None, None
+            for x in _partitions(L):
+                cfg = Config(x=tuple(x), d=d, z=tuple([j] * L))
+                ev = evaluate(prof, platform, cfg, total_micro_batches,
+                              pipelined_sync=pipelined_sync)
+                if ev.mem_ok and ev.t_iter < best_t:   # throughput only
+                    best_t, best_cfg, best_ev = ev.t_iter, cfg, ev
+            if best_cfg is None:
+                continue
+            obj = best_ev.objective(a1, a2)
+            if best is None or obj < best.objective:
+                best = PlanResult(best_cfg, best_ev, obj, 0.0, prof)
+    if best is not None:
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+    return best
+
+
+def bayes_solve(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    alpha: Tuple[float, float],
+    total_micro_batches: int,
+    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
+    merge_to: int = 10,
+    rounds: int = 100,
+    seed: int = 0,
+    pipelined_sync: bool = True,
+) -> Optional[PlanResult]:
+    """Black-box joint search (paper's Bayes baseline): seeded random
+    proposals + local mutation of the incumbent, evaluated on the performance
+    model (the paper does the same to avoid measurement cost, App. E)."""
+    t0 = time.time()
+    a1, a2 = alpha
+    prof = merge_layers(profile, merge_to)
+    L = prof.L
+    J = len(platform.memory_options)
+    rng = np.random.default_rng(seed)
+    ds = [d for d in d_options if total_micro_batches % d == 0 and total_micro_batches >= d]
+    best: Optional[PlanResult] = None
+
+    def propose():
+        if best is not None and rng.random() < 0.5:  # local mutation
+            cfg = best.config
+            x = list(cfg.x)
+            if L > 1 and rng.random() < 0.5:
+                i = rng.integers(0, L - 1)
+                x[i] = 1 - x[i]
+            stage_mem = [cfg.z[lo] for lo, _ in stages_of(x)]
+            s = rng.integers(0, len(stage_mem))
+            stage_mem[s] = int(np.clip(stage_mem[s] + rng.integers(-1, 2), 0, J - 1))
+            return tuple(x), int(cfg.d), stage_mem
+        x = tuple(rng.integers(0, 2, size=L - 1))
+        d = int(rng.choice(ds))
+        stage_mem = list(rng.integers(0, J, size=sum(x) + 1))
+        return x, d, stage_mem
+
+    for _ in range(rounds):
+        x, d, stage_mem = propose()
+        cfg = Config(x=tuple(x), d=d, z=_expand_z(stage_mem, x, L))
+        ev = evaluate(prof, platform, cfg, total_micro_batches,
+                      pipelined_sync=pipelined_sync)
+        if not ev.mem_ok:
+            continue
+        obj = ev.objective(a1, a2)
+        if best is None or obj < best.objective:
+            best = PlanResult(cfg, ev, obj, 0.0, prof)
+    if best is not None:
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+    return best
+
+
+# -------------------------------------------------------------- recommendation
+def recommend(results: Sequence[PlanResult], threshold: float = 0.8) -> PlanResult:
+    """Paper §5.1: fastest config whose speedup/cost-increase ratio over the
+    min-cost config satisfies delta >= threshold."""
+    feas = [r for r in results if r is not None]
+    assert feas
+    mc = min(feas, key=lambda r: r.evaluation.c_iter)
+    t_mc, c_mc = mc.evaluation.t_iter, mc.evaluation.c_iter
+    cands = []
+    for r in feas:
+        t_p, c_p = r.evaluation.t_iter, r.evaluation.c_iter
+        if c_p <= c_mc or t_p >= t_mc:
+            delta = np.inf if (c_p <= c_mc and t_p <= t_mc) else 0.0
+        else:
+            delta = (t_mc / t_p - 1) / (c_p / c_mc - 1)
+        if delta >= threshold:
+            cands.append(r)
+    if not cands:
+        return mc
+    return min(cands, key=lambda r: r.evaluation.t_iter)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_batch, batch_iterator  # noqa: F401
+from repro.data.specs import input_specs  # noqa: F401

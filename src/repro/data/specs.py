@@ -1,0 +1,47 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run / lowering).
+
+No device allocation happens here; the launch layer attaches NamedShardings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape, *, global_batch: int | None = None) -> dict:
+    B = global_batch if global_batch is not None else shape.global_batch
+    S = shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        if cfg.frontend == "audio":
+            specs = {
+                "frames": sds((B, S, cfg.d_model), jnp.float32),
+                "labels": sds((B, S), jnp.int32),
+            }
+        elif cfg.frontend == "vision":
+            specs = {
+                "tokens": sds((B, S), jnp.int32),
+                "image_embeds": sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32),
+                "labels": sds((B, S), jnp.int32),
+            }
+        else:
+            specs = {
+                "tokens": sds((B, S), jnp.int32),
+                "labels": sds((B, S), jnp.int32),
+            }
+        return specs
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frames": sds((B, S, cfg.d_model), jnp.float32)}
+        if cfg.frontend == "vision":
+            return {
+                "tokens": sds((B, S), jnp.int32),
+                "image_embeds": sds((B, cfg.n_frontend_tokens, cfg.d_model), jnp.float32),
+            }
+        return {"tokens": sds((B, S), jnp.int32)}
+    if shape.kind == "decode":
+        # caches are produced separately (launch layer / init_decode_caches)
+        return {"tokens": sds((B, 1), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,90 @@
+"""Deterministic synthetic data pipeline.
+
+Batches are a pure function of (seed, step, shard) so every data-parallel
+worker regenerates its own shard without any host coordination — the
+serverless-friendly "shared-nothing" loader the paper's workers use, adapted
+to SPMD: the global batch is logically [global_batch, seq]; shard w of n takes
+rows [w*B/n, (w+1)*B/n).
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import multimodal
+
+ZIPF_S = 1.2  # token unigram skew: learnable signal (uniform tokens would
+              # pin the optimal CE at ln(V), making loss curves flat)
+
+
+def _zipf_logits(vocab: int) -> jax.Array:
+    ranks = jnp.arange(1, vocab + 1, dtype=jnp.float32)
+    return -ZIPF_S * jnp.log(ranks)
+
+
+def sample_tokens(key, shape, vocab: int) -> jax.Array:
+    logits = jnp.broadcast_to(_zipf_logits(vocab), (*shape, vocab))
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def make_batch(
+    cfg: ArchConfig,
+    shape: InputShape,
+    *,
+    seed: int = 0,
+    step: int = 0,
+    shard: int = 0,
+    n_shards: int = 1,
+    global_batch: int | None = None,
+    seq_len: int | None = None,
+) -> dict:
+    B_g = global_batch if global_batch is not None else shape.global_batch
+    S = seq_len if seq_len is not None else shape.seq_len
+    assert B_g % n_shards == 0
+    B = B_g // n_shards
+    key = jax.random.fold_in(jax.random.fold_in(jax.random.PRNGKey(seed), step), shard)
+    k1, k2, k3 = jax.random.split(key, 3)
+
+    if shape.kind == "train":
+        if cfg.frontend == "audio":
+            frames = multimodal.synth_audio_frames(k1, cfg, B, S)
+            labels = sample_tokens(k2, (B, S), cfg.vocab_size)
+            return {"frames": frames, "labels": labels}
+        tokens = sample_tokens(k1, (B, S), cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}  # next-token LM objective
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = multimodal.synth_patch_embeds(k3, cfg, B)
+        return batch
+    if shape.kind == "prefill":
+        if cfg.frontend == "audio":
+            return {"frames": multimodal.synth_audio_frames(k1, cfg, B, S)}
+        batch = {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab_size, jnp.int32)}
+        if cfg.frontend == "vision":
+            batch["image_embeds"] = multimodal.synth_patch_embeds(k3, cfg, B)
+        return batch
+    if shape.kind == "decode":
+        return {"tokens": jax.random.randint(k1, (B, 1), 0, cfg.vocab_size, jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def batch_iterator(
+    cfg: ArchConfig,
+    shape: InputShape,
+    *,
+    seed: int = 0,
+    shard: int = 0,
+    n_shards: int = 1,
+    global_batch: int | None = None,
+    seq_len: int | None = None,
+) -> Iterator[dict]:
+    step = 0
+    while True:
+        yield make_batch(
+            cfg, shape, seed=seed, step=step, shard=shard, n_shards=n_shards,
+            global_batch=global_batch, seq_len=seq_len,
+        )
+        step += 1

@@ -1,0 +1,55 @@
+"""jit'd wrappers selecting Pallas kernels (TPU) or jnp oracles (CPU).
+
+Models call these; ``REPRO_KERNEL_MODE`` picks the backend:
+  auto      — Pallas on TPU, reference elsewhere (default)
+  interpret — Pallas in interpret mode (CPU correctness runs)
+  ref       — always the jnp oracle
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+def _mode() -> str:
+    m = os.environ.get("REPRO_KERNEL_MODE", "auto")
+    if m == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return m
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, positions=None):
+    mode = _mode()
+    if mode == "ref":
+        return _ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                        positions=positions)
+    from repro.kernels.flash_attention import flash_attention as fa
+
+    return fa(q, k, v, causal=causal, window=window,
+              interpret=(mode == "interpret"))
+
+
+def decode_attention(q, k_cache, v_cache, length):
+    mode = _mode()
+    if mode == "ref":
+        return _ref.decode_attention_ref(q, k_cache, v_cache, length)
+    from repro.kernels.decode_attention import decode_attention as da
+
+    return da(q, k_cache, v_cache, length, interpret=(mode == "interpret"))
+
+
+def swiglu(x, w_gate, w_up):
+    mode = _mode()
+    orig = x.shape
+    x2 = x.reshape(-1, orig[-1])
+    if mode == "ref" or x2.shape[0] % 8:
+        out = _ref.swiglu_ref(x2, w_gate, w_up)
+    else:
+        from repro.kernels.swiglu import swiglu as sg
+
+        out = sg(x2, w_gate, w_up, interpret=(mode == "interpret"))
+    return out.reshape(*orig[:-1], w_gate.shape[1])

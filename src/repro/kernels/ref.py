@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the reference the tests
+assert_allclose against, and the CPU execution path of the models)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,   # [B, S, Hq, hd]
+    k: jax.Array,   # [B, S, Hkv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    positions: jax.Array | None = None,  # [S]
+) -> jax.Array:
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    pos = positions if positions is not None else jnp.arange(S, dtype=jnp.int32)
+    qf = q.astype(jnp.float32) * hd**-0.5
+    qg = qf.reshape(B, S, Hkv, G, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    if causal:
+        allow = pos[None, :] <= pos[:, None]
+        if window:
+            allow &= pos[None, :] > (pos[:, None] - window)
+        s = jnp.where(allow[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q: jax.Array,        # [B, Hq, hd] one new token per sequence
+    k_cache: jax.Array,  # [B, Hkv, C, hd]
+    v_cache: jax.Array,
+    length: jax.Array,   # [] or [B]: number of valid cache slots
+) -> jax.Array:
+    B, Hq, hd = q.shape
+    Hkv, C = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    length = jnp.broadcast_to(jnp.asarray(length), (B,))
+    qg = (q.astype(jnp.float32) * hd**-0.5).reshape(B, Hkv, G, hd)
+    s = jnp.einsum("bhgd,bhcd->bhgc", qg, k_cache.astype(jnp.float32))
+    valid = jnp.arange(C)[None, :] < length[:, None]          # [B, C]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgc,bhcd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def swiglu_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array) -> jax.Array:
+    """x [T, d] @ {w_gate, w_up} [d, f] -> silu(x wg) * (x wu), fp32 accum."""
+    xf = x.astype(jnp.float32)
+    g = xf @ w_gate.astype(jnp.float32)
+    u = xf @ w_up.astype(jnp.float32)
+    return (jax.nn.silu(g) * u).astype(x.dtype)

@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "")
+    + " --xla_force_host_platform_device_count="
+    + os.environ.get("DRYRUN_DEVICES", "512")
+)
+
+"""Multi-pod dry-run (deliverable e).
+
+Lowers + compiles every (architecture x input-shape) combination on the
+production mesh — 16x16 single-pod and 2x16x16 multi-pod — with
+ShapeDtypeStruct stand-ins (no allocation), printing memory_analysis() and
+cost_analysis() and writing a JSON record with the roofline terms
+(launch.roofline) for EXPERIMENTS.md §Dry-run / §Roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-mini-3.8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.core import sharding
+from repro.core.plan import make_plan
+from repro.data.specs import input_specs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.optim import AdamW
+from repro.train import serve_step as srv
+from repro.train import train_step as ts
+
+
+def _with_shardings(tree_specs, pspec_tree, mesh):
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        tree_specs,
+        pspec_tree,
+        is_leaf=lambda x: isinstance(x, (jax.ShapeDtypeStruct, P)),
+    )
+
+
+def lower_combo(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                plan_overrides: dict | None = None, mesh=None, verbose=True,
+                bidirectional: bool = True):
+    """Lower+compile one combination.  Returns (record dict, compiled)."""
+    cfg = get_config(arch_id)
+    shape = INPUT_SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        return {"arch": arch_id, "shape": shape_name, "status": "skip",
+                "reason": "encoder has no decode step" if cfg.is_encoder
+                else "full-attention arch: 500k decode infeasible (DESIGN.md)"}, None
+    mesh = mesh if mesh is not None else make_production_mesh(multi_pod=multi_pod)
+    pods = mesh.shape.get("pod", 1)
+    data = mesh.shape["data"]
+    model = mesh.shape["model"]
+    overrides = plan_overrides or {}
+    plan = make_plan(cfg, shape, data=data, model=model, pods=pods, **overrides)
+    optimizer = AdamW(lr=1e-4)
+
+    t0 = time.time()
+    abs_params = sharding.abstract_params(cfg, plan, mesh)
+    b_specs = ts.batch_pspecs(cfg, shape, plan)
+    abs_batch = _with_shardings(input_specs(cfg, shape), b_specs, mesh)
+
+    with jax.set_mesh(mesh):
+        if shape.kind == "train":
+            opt_abs, opt_specs = ts.opt_state_specs(cfg, plan, optimizer)
+            abs_opt = _with_shardings(opt_abs, opt_specs, mesh)
+            step = ts.make_train_step(cfg, plan, mesh, optimizer, shape, donate=True,
+                                      bidirectional=bidirectional)
+            lowered = step.lower(abs_params, abs_opt, abs_batch, jnp.int32(0))
+        elif shape.kind == "prefill":
+            step = srv.make_prefill_step(cfg, plan, mesh, shape)
+            lowered = step.lower(abs_params, abs_batch)
+        else:  # decode
+            cshapes, cspecs = srv.cache_specs(cfg, plan, shape)
+            abs_caches = _with_shardings(cshapes, cspecs, mesh)
+            step = srv.make_decode_step(cfg, plan, mesh, shape, donate=True)
+            lowered = step.lower(abs_params, abs_caches, abs_batch["tokens"])
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    chips = pods * data * model
+    ana = rl.analyze(compiled)
+    analytic = rl.analytic_roofline(cfg, shape, plan, bidirectional=bidirectional)
+    mf = rl.model_flops(cfg, shape)
+    record = {
+        "arch": arch_id,
+        "shape": shape_name,
+        "mesh": f"{pods}x{data}x{model}" if pods > 1 else f"{data}x{model}",
+        "status": "ok",
+        "plan": {"stages": plan.stages, "tensor": plan.tensor,
+                 "microbatches": plan.microbatches, "ep": plan.ep,
+                 "seq_shards": plan.seq_shards, "remat": plan.remat,
+                 "bidirectional": bidirectional},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline_hlo": ana.as_dict(),
+        "roofline": analytic.as_dict(),
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / chips,
+        "useful_flops_ratio": (mf / chips) / analytic.flops if analytic.flops else None,
+    }
+    if verbose:
+        print(f"[dryrun] {arch_id} x {shape_name} mesh={record['mesh']} "
+              f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+              f"peak={record['memory']['peak_bytes']} "
+              f"bottleneck={analytic.bottleneck} "
+              f"t=(c{analytic.t_compute*1e3:.1f} m{analytic.t_memory*1e3:.1f} "
+              f"x{analytic.t_collective*1e3:.1f})ms")
+        print("  memory_analysis:", mem)
+        ca = compiled.cost_analysis() or {}
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (ca.get("flops", 0.0), ca.get("bytes accessed", 0.0)))
+    return record, compiled
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args(argv)
+
+    combos = []
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        for a in archs:
+            for s in shapes:
+                tag = f"{a}_{s}_{'2x16x16' if mp else '16x16'}".replace("/", "-")
+                try:
+                    rec, _ = lower_combo(a, s, multi_pod=mp, mesh=mesh)
+                except Exception as e:  # noqa: BLE001
+                    traceback.print_exc()
+                    rec = {"arch": a, "shape": s, "status": "fail",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures += 1
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=2)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

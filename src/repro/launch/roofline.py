@@ -1,0 +1,391 @@
+"""Roofline analysis from compiled dry-run artifacts (deliverable g).
+
+Three terms per (arch x shape x mesh), TPU v5e constants:
+    compute    = HLO_FLOPs / (chips * 197e12 bf16 FLOP/s)
+    memory     = HLO_bytes / (chips * 819e9 B/s HBM)
+    collective = per-chip link bytes / 50e9 B/s ICI
+
+cost_analysis() supplies FLOPs/bytes; collective bytes are NOT in
+cost_analysis, so we parse the compiled HLO text and sum operand/result
+sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, converting each to ring-schedule bytes-on-link using its
+replica_groups size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link direction
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.MULTILINE,
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveOp:
+    kind: str
+    result_bytes: int
+    group_size: int
+    trip_mult: float = 1.0  # while-loop trip multiplier (scan bodies)
+
+    @property
+    def link_bytes(self) -> float:
+        """Bytes through one link direction per chip, ring schedules."""
+        g = max(1, self.group_size)
+        if self.kind == "collective-permute":
+            return float(self.result_bytes)  # point-to-point, no groups
+        if g == 1:
+            return 0.0
+        if self.kind == "all-gather":
+            # result = gathered size; each chip receives (g-1)/g of it
+            return self.result_bytes * (g - 1) / g
+        if self.kind == "reduce-scatter":
+            # result = shard; input g*shard moves (g-1) shard-hops
+            return self.result_bytes * (g - 1)
+        if self.kind == "all-reduce":
+            return 2 * self.result_bytes * (g - 1) / g
+        if self.kind == "all-to-all":
+            return self.result_bytes * (g - 1) / g
+        if self.kind == "collective-permute":
+            return float(self.result_bytes)
+        return float(self.result_bytes)
+
+    @property
+    def weighted_link_bytes(self) -> float:
+        return self.link_bytes * self.trip_mult
+
+
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*?\)\s*->", re.MULTILINE)
+_WHILE_RE = re.compile(
+    r"while\([^\n]*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", re.MULTILINE
+)
+_TRIP_RE = re.compile(r"constant\((\d+)\)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+
+
+def _computation_spans(hlo_text: str) -> Dict[str, tuple]:
+    """name -> (start, end) character spans of each HLO computation."""
+    marks = [(m.start(), m.group(1)) for m in _COMPUTATION_RE.finditer(hlo_text)]
+    spans = {}
+    for i, (pos, name) in enumerate(marks):
+        end = marks[i + 1][0] if i + 1 < len(marks) else len(hlo_text)
+        spans[name] = (pos, end)
+    return spans
+
+
+def computation_multipliers(hlo_text: str) -> Dict[str, float]:
+    """Execution-count multiplier per computation: while bodies run
+    trip-count times (jax scans lower to while loops whose condition compares
+    the induction variable against a constant)."""
+    spans = _computation_spans(hlo_text)
+
+    def owner(pos: int) -> Optional[str]:
+        for name, (s, e) in spans.items():
+            if s <= pos < e:
+                return name
+        return None
+
+    # edges: computation -> (child computation, multiplier)
+    children: Dict[str, List[tuple]] = {}
+    for m in _WHILE_RE.finditer(hlo_text):
+        cond, body = m.group(1), m.group(2)
+        trips = 1
+        if cond in spans:
+            s, e = spans[cond]
+            consts = [int(c) for c in _TRIP_RE.findall(hlo_text[s:e])]
+            if consts:
+                trips = max(consts)
+        par = owner(m.start())
+        if par:
+            children.setdefault(par, []).append((body, float(trips)))
+            children[par].append((cond, float(trips)))
+    for m in _CALL_RE.finditer(hlo_text):
+        par = owner(m.start())
+        if par:
+            children.setdefault(par, []).append((m.group(1), 1.0))
+
+    mult: Dict[str, float] = {}
+    roots = [n for n in spans if n.startswith("main") or n == "entry"]
+    if not roots:
+        # entry computation is the one never referenced as a child
+        referenced = {c for kids in children.values() for c, _ in kids}
+        roots = [n for n in spans if n not in referenced]
+
+    def visit(name: str, m: float, depth=0):
+        if depth > 64:
+            return
+        mult[name] = max(mult.get(name, 0.0), m)
+        for child, k in children.get(name, []):
+            visit(child, m * k, depth + 1)
+
+    for r in roots:
+        visit(r, 1.0)
+    return mult
+
+
+def parse_collectives(hlo_text: str, *, trip_weighted: bool = True) -> List[CollectiveOp]:
+    mult = computation_multipliers(hlo_text) if trip_weighted else {}
+    spans = _computation_spans(hlo_text)
+
+    def owner_mult(pos: int) -> float:
+        best = 1.0
+        for name, (s, e) in spans.items():
+            if s <= pos < e:
+                return mult.get(name, 1.0)
+        return best
+
+    out = []
+    for m in _COLL_RE.finditer(hlo_text):
+        type_str, kind = m.group(1), m.group(2)
+        line_end = hlo_text.find("\n", m.end())
+        line = hlo_text[m.start(): line_end if line_end > 0 else None]
+        if "-done(" in line:
+            continue
+        gs = 1
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            gs = len([t for t in gm.group(1).split(",") if t.strip()])
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            if gi:
+                gs = int(gi.group(2))
+        w = owner_mult(m.start()) if trip_weighted else 1.0
+        op = CollectiveOp(kind=kind, result_bytes=_shape_bytes(type_str), group_size=gs)
+        op.trip_mult = w
+        out.append(op)
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float                  # per-chip HLO flops
+    hbm_bytes: float              # per-chip bytes accessed
+    link_bytes: float             # per-chip bytes through a link direction
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+    collective_bytes_by_kind: Dict[str, float] = field(default_factory=dict)
+    bubble_factor: float = 1.0    # GPipe fill/drain: (mu + S - 1) / mu
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.link_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_step_est(self) -> float:
+        """Wall-time estimate: busy compute stretched by the pipeline bubble,
+        plus non-overlapped collectives (memory term assumed overlapped with
+        compute on TPU)."""
+        return max(self.t_compute, self.t_memory) * self.bubble_factor + self.t_collective
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "link_bytes": self.link_bytes,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bubble_factor": self.bubble_factor,
+            "t_step_est_s": self.t_step_est,
+            "bottleneck": self.bottleneck,
+            "collective_counts": self.collective_counts,
+            "collective_bytes_by_kind": self.collective_bytes_by_kind,
+        }
+
+
+def analyze(compiled, *, hlo_text: Optional[str] = None) -> Roofline:
+    """HLO-derived roofline.  NOTE: XLA's aggregate cost_analysis counts
+    while-loop (scan) bodies ONCE; the collective term here is corrected with
+    parsed trip counts, and the raw flops/bytes are kept as a lower bound —
+    the analytic model (analytic_roofline) is the primary compute/memory
+    term and is cross-checked against these numbers in EXPERIMENTS.md."""
+    cost = compiled.cost_analysis() or {}
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    ops = parse_collectives(text)
+    link = sum(op.weighted_link_bytes for op in ops)
+    counts: Dict[str, int] = {}
+    by_kind: Dict[str, float] = {}
+    for op in ops:
+        counts[op.kind] = counts.get(op.kind, 0) + 1
+        by_kind[op.kind] = by_kind.get(op.kind, 0.0) + op.weighted_link_bytes
+    return Roofline(flops=flops, hbm_bytes=hbm, link_bytes=link,
+                    collective_counts=counts, collective_bytes_by_kind=by_kind)
+
+
+# --------------------------------------------------------------- analytic model
+def analytic_roofline(cfg, shape, plan, *, bidirectional: bool = True) -> Roofline:
+    """First-principles per-chip roofline for one (arch x shape x plan).
+
+    FLOPs: 2*N_active per token forward (+2x backward, +1x remat recompute),
+    plus attention's O(S*ctx) term per layer kind.  HBM bytes: weight reads
+    per micro-batch pass, activation traffic, KV-cache reads (decode), and
+    optimizer state read/write (train).  Collective bytes: pipeline permutes,
+    grad reduce-scatter + param all-gather over data, EP all-to-alls, TP
+    psums — matching the schedule core.pipeline emits.
+    """
+    from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, MOE_FF, GLOBAL_WINDOW
+
+    chips = plan.pods * plan.data * plan.model_axis
+    P_BYTES = 2 if cfg.param_dtype == "bfloat16" else 4
+    N_active = cfg.active_param_count()
+    N_total = cfg.param_count()
+    d = cfg.d_model
+    S = shape.seq_len
+    B = shape.global_batch
+    train = shape.kind == "train"
+    decode = shape.kind == "decode"
+
+    # ---------- matmul flops per token (2*N_active) + attention extra
+    def attn_extra_flops_per_layer(tokens_ctx):
+        # QK^T + PV: 4 * Hq * hd * ctx per token
+        return 4.0 * cfg.n_heads * cfg.hd * tokens_ctx
+
+    extra = 0.0
+    for i in range(cfg.n_layers):
+        spec = cfg.layer_spec(i)
+        if spec.mixer == ATTN:
+            if decode:
+                ctx = min(S, spec.window) if spec.window else S
+            else:
+                ctx = min(S, spec.window) if spec.window else S / 2  # causal avg
+            extra += attn_extra_flops_per_layer(ctx)
+        elif spec.mixer == MLSTM:
+            extra += attn_extra_flops_per_layer(256)  # chunk-local quadratic
+        elif spec.mixer == MAMBA:
+            extra += 10.0 * cfg.mamba.d_inner(d) * cfg.mamba.d_state
+    n_tokens = B * S if not decode else B
+    fwd = (2.0 * N_active + extra) * n_tokens
+    if train:
+        remat = 1.0 if plan.remat in ("tick", "layer") else 0.0
+        flops_global = fwd * (3.0 + remat)
+    else:
+        flops_global = fwd
+    flops_chip = flops_global / chips
+
+    # ---------- HBM bytes per chip
+    # params per chip: dense split over (stages x tensor); experts also over EP
+    moe_params = 0.0
+    if cfg.moe is not None:
+        n_moe = sum(1 for i in range(cfg.n_layers) if cfg.layer_spec(i).ff == MOE_FF)
+        moe_params = n_moe * cfg.moe.n_experts * 3 * d * cfg.moe.d_ff_expert
+    dense_params = N_total - moe_params
+    params_chip = (dense_params / (plan.stages * plan.tensor)
+                   + moe_params / (plan.stages * plan.tensor * plan.ep)) * P_BYTES
+
+    mb_local = (B // (plan.pods * plan.data)) if plan.seq_shards == 1 else B // plan.pods
+    n_mb = plan.microbatches
+    passes = (3.0 if train else 1.0)  # fwd+bwd(+update) vs fwd
+    weight_traffic = params_chip * n_mb * passes
+    act_traffic = 6.0 * mb_local * S * d * P_BYTES * (cfg.n_layers / max(1, plan.stages)) * passes / max(1, plan.tensor)
+    kv_traffic = 0.0
+    if decode:
+        for i in range(cfg.n_layers):
+            spec = cfg.layer_spec(i)
+            if spec.mixer == ATTN:
+                ctx = min(S, spec.window) if spec.window else S // plan.seq_shards
+                kv_local = max(1, cfg.n_kv_heads // plan.tensor) if plan.tensor > 1 else cfg.n_kv_heads
+                kv_traffic += (mb_local if plan.seq_shards == 1 else B // plan.pods) * 2 * kv_local * ctx * cfg.hd * P_BYTES
+        kv_traffic /= max(1, plan.stages)
+    opt_traffic = 0.0
+    if train:
+        opt_traffic = (params_chip / P_BYTES) * 4 * 3 * 2 / plan.data  # m,v,master rw fp32, ZeRO-sharded
+    hbm_chip = weight_traffic + act_traffic + kv_traffic + opt_traffic
+
+    # ---------- collective bytes per chip (link-direction bytes)
+    coll = {}
+    act_bytes_mb = (mb_local // max(1, n_mb)) * S * d * P_BYTES if not decode else (mb_local // max(1, n_mb)) * d * P_BYTES
+    # pipeline permutes: each micro-batch crosses S_eff-1 boundaries (x3 for train fwd+bwd grads... bwd sends grads back)
+    hops = (plan.stages - 1) * n_mb * (2.0 if train else 1.0)
+    coll["collective-permute"] = hops * act_bytes_mb / max(1, plan.stages)  # per-chip share
+    # bidirectional rings drive both link directions -> half the wall bytes
+    ring = 0.5 if bidirectional else 1.0
+    if train:
+        g_bytes = params_chip * 2  # fp32 grads of bf16 params
+        coll["reduce-scatter"] = ring * g_bytes * (plan.data - 1) / plan.data
+        coll["all-gather"] = ring * params_chip * (plan.data - 1) / plan.data
+        if plan.pods > 1:
+            coll["all-reduce"] = ring * 2 * g_bytes * (plan.pods - 1) / plan.pods
+    if cfg.moe is not None and plan.ep > 1:
+        n_moe_stage = sum(1 for i in range(cfg.n_layers) if cfg.layer_spec(i).ff == MOE_FF) / max(1, plan.stages)
+        a2a = 2 * n_moe_stage * n_mb * act_bytes_mb * (3.0 if train else 1.0)
+        coll["all-to-all"] = a2a * (plan.data - 1) / plan.data
+    if plan.tensor > 1:
+        # row-parallel psums: ~2 per layer per micro-batch pass
+        n_layer_stage = cfg.n_layers / max(1, plan.stages)
+        coll["all-reduce"] = coll.get("all-reduce", 0.0) + (
+            2 * n_layer_stage * n_mb * act_bytes_mb * passes
+            * 2 * (plan.tensor - 1) / plan.tensor
+        )
+    if plan.seq_shards > 1:
+        # flash-decode partial-softmax psum per global-attn layer
+        n_glob = sum(1 for i in range(cfg.n_layers)
+                     if cfg.layer_spec(i).mixer == ATTN and cfg.layer_spec(i).window == GLOBAL_WINDOW)
+        part = B * cfg.n_heads * (cfg.hd + 2) * 4
+        coll["all-reduce"] = coll.get("all-reduce", 0.0) + (
+            2 * (n_glob / max(1, plan.stages)) * part * (plan.data - 1) / plan.data
+        )
+    link = float(sum(coll.values()))
+    bubble = (plan.microbatches + plan.stages - 1) / plan.microbatches
+    return Roofline(flops=flops_chip, hbm_bytes=hbm_chip, link_bytes=link,
+                    collective_counts={k: 1 for k in coll},
+                    collective_bytes_by_kind=coll,
+                    bubble_factor=bubble)
+
+
+def model_flops(cfg, shape, *, backward: bool = True) -> float:
+    """MODEL_FLOPS = 6 N D (dense) / 6 N_active D (MoE); decode: per token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

@@ -1,0 +1,119 @@
+"""Training launcher: mesh + plan + pipelined train loop.
+
+On real hardware this runs the production 16x16 (or 2x16x16) mesh; on CPU it
+runs any mesh of fake host devices for bring-up, e.g.:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.train \\
+        --arch phi3-mini-3.8b --reduced --data 2 --model 4 --steps 20
+
+``--plan auto`` asks core.tpu_planner for the best (stages x tp x mu x remat)
+factorization instead of the config default.  Checkpoints via the
+Function-Manager policy every --ckpt-every steps.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import FunctionManager
+from repro.configs import get_config, INPUT_SHAPES
+from repro.configs.base import InputShape
+from repro.core import sharding, tpu_planner
+from repro.core.plan import make_plan
+from repro.data.synthetic import make_batch
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import registry
+from repro.optim import AdamW
+from repro.train.train_step import init_opt_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--shape", default=None, help="named input shape or none")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--data", type=int, default=16)
+    ap.add_argument("--model", type=int, default=16)
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--plan", default="config", choices=["config", "auto"])
+    ap.add_argument("--stages", type=int, default=None)
+    ap.add_argument("--tensor", type=int, default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--uni-ring", action="store_true",
+                    help="LambdaML-analog unidirectional ring sync")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt", default="/tmp/repro_train.msgpack")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if args.shape:
+        shape = INPUT_SHAPES[args.shape]
+    else:
+        shape = InputShape("cli", args.seq, args.batch, "train")
+
+    if args.pods > 1 and args.data == 16 and args.model == 16:
+        mesh = make_production_mesh(multi_pod=True)
+    elif args.data == 16 and args.model == 16 and args.pods == 1:
+        mesh = make_production_mesh()
+    else:
+        mesh = make_test_mesh(args.data, args.model, pods=args.pods)
+
+    overrides = {}
+    if args.plan == "auto":
+        best = tpu_planner.solve(cfg, shape, data=args.data, model=args.model,
+                                 pods=args.pods)
+        assert best, "no feasible plan"
+        p = best[0].plan
+        overrides = dict(stages=p.stages, tensor=p.tensor,
+                         microbatches=p.microbatches, remat=p.remat)
+        print(f"[plan auto] S={p.stages} tp={p.tensor} mu={p.microbatches} "
+              f"remat={p.remat} (est {best[0].t_step_est*1e3:.1f} ms/step)")
+    for k in ("stages", "tensor", "microbatches"):
+        v = getattr(args, k)
+        if v is not None:
+            overrides[k] = v
+    if overrides.get("stages") or overrides.get("tensor"):
+        cfg = dataclasses.replace(
+            cfg,
+            stages=overrides.get("stages", cfg.stages),
+            tensor=overrides.get("tensor", cfg.tensor),
+        )
+    plan = make_plan(cfg, shape, data=args.data, model=args.model,
+                     pods=args.pods, **overrides)
+    print(f"plan: stages={plan.stages} tensor={plan.tensor} "
+          f"mu={plan.microbatches} ep={plan.ep} remat={plan.remat}")
+
+    optimizer = AdamW(lr=args.lr)
+    fm = FunctionManager(args.ckpt)
+    with jax.set_mesh(mesh):
+        base = registry.init_params(cfg, jax.random.PRNGKey(0))
+        params = sharding.to_pipeline_layout(cfg, plan, base)
+        opt_state = init_opt_state(cfg, plan, optimizer, params)
+        step_fn = make_train_step(cfg, plan, mesh, optimizer, shape,
+                                  bidirectional=not args.uni_ring)
+        for i in range(args.steps):
+            batch = make_batch(cfg, shape, step=i)
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(params, opt_state, batch, i)
+            print(f"step {i:4d} loss={float(metrics['loss']):.4f} "
+                  f"ce={float(metrics['ce']):.4f} ({time.time()-t0:.2f}s)",
+                  flush=True)
+            if (i + 1) % args.ckpt_every == 0 or fm.should_checkpoint():
+                fm.checkpoint_and_restart((params, opt_state), i + 1)
+                print(f"  checkpointed -> {fm.path}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,385 @@
+"""Grouped-query attention with RoPE, sliding windows and KV caches.
+
+Shape-driven tensor parallelism: the number of local query heads is inferred
+from the (possibly TP-sliced) projection weights; ``ctx.psum_tp`` reduces the
+row-parallel output projection.
+
+Decode supports two cache layouts:
+  * full cache [B, kv, S_ctx, hd]  (global-attention layers)
+  * rolling-window cache [B, kv, W, hd] with a monotone write cursor
+    (sliding-window layers — the gemma3 local 5/6 layers), O(W) memory.
+For ``long_500k`` the *global* layers shard the S_ctx axis over the data mesh
+axis and combine partial softmaxes via psum (flash-decode style).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, LayerSpec, GLOBAL_WINDOW
+from repro.models.common import ParallelCtx, LOCAL_CTX, apply_rope, dense_init, rms_norm
+
+
+# ------------------------------------------------------------------ parameters
+def init_attn_params(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, cfg.n_heads * hd), dtype),
+        "wk": dense_init(ks[1], (d, cfg.n_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (d, cfg.n_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * hd, d), dtype, scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ArchConfig):
+    """x [B,S,d] -> q [B,S,Hq,hd], k/v [B,S,Hkv,hd] (local head counts)."""
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = x.shape[0], x.shape[1]
+    q = q.reshape(B, S, -1, hd)
+    k = k.reshape(B, S, -1, hd)
+    v = v.reshape(B, S, -1, hd)
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=2)
+
+
+# ------------------------------------------------------- blockwise (flash) path
+BLOCKWISE_THRESHOLD = 4_096  # use O(S*block) attention at/above this seq len
+Q_BLOCK = 512
+K_BLOCK = 1024
+
+
+def _blockwise_attention(
+    q: jax.Array,  # [B,S,Hq,hd]
+    k: jax.Array,  # [B,S,Hkv,hd]
+    v: jax.Array,
+    positions: jax.Array,  # [S]
+    causal: bool,
+    window: int,
+) -> jax.Array:
+    """Online-softmax attention scanning over (q-block, k-block) tiles; the
+    pure-JAX twin of the Pallas flash kernel (kernels/flash_attention.py).
+    Sliding-window layers slice only the in-window keys per q block, so their
+    FLOPs/memory scale with S*window rather than S^2.
+    """
+    B, S, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = hd**-0.5
+    QB = min(Q_BLOCK, S)
+    assert S % QB == 0
+    nqb = S // QB
+    qg = q.reshape(B, S, Hkv, G, hd).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if window:
+        # pad keys by window so each q block sees exactly [qs-W, qs+QB)
+        W = window
+        kp = jnp.pad(kf, ((0, 0), (W, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(vf, ((0, 0), (W, 0), (0, 0), (0, 0)))
+        pp = jnp.pad(positions, (W, 0), constant_values=-1)
+
+        def qblock(i):
+            qs = i * QB
+            qb = jax.lax.dynamic_slice_in_dim(qg, qs, QB, axis=1)
+            qpos = jax.lax.dynamic_slice_in_dim(positions, qs, QB, axis=0)
+            kb = jax.lax.dynamic_slice_in_dim(kp, qs, W + QB, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vp, qs, W + QB, axis=1)
+            kpos = jax.lax.dynamic_slice_in_dim(pp, qs, W + QB, axis=0)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb)
+            allow = (kpos[None, :] <= qpos[:, None]) & (
+                kpos[None, :] > qpos[:, None] - W
+            ) & (kpos >= 0)[None, :]
+            s = jnp.where(allow[None, None, None], s, -1e30)
+            p = jax.nn.softmax(s, axis=-1)
+            return jnp.einsum("bhgqk,bkhd->bqhgd", p, vb)
+
+        out = jax.lax.map(jax.checkpoint(qblock), jnp.arange(nqb))  # [nqb,B,QB,...]
+        out = jnp.moveaxis(out, 0, 1).reshape(B, S, Hkv, G, hd)
+        return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+    KB = min(K_BLOCK, S)
+    assert S % KB == 0
+    nkb = S // KB
+
+    def qblock(i):
+        qs = i * QB
+        qb = jax.lax.dynamic_slice_in_dim(qg, qs, QB, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(positions, qs, QB, axis=0)
+
+        def kstep(carry, j):
+            m, l, acc = carry
+            ks = j * KB
+            kb = jax.lax.dynamic_slice_in_dim(kf, ks, KB, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(vf, ks, KB, axis=1)
+            kpos = jax.lax.dynamic_slice_in_dim(positions, ks, KB, axis=0)
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kb)
+            if causal:
+                allow = kpos[None, :] <= qpos[:, None]
+                s = jnp.where(allow[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bhgqk,bkhd->bhgqd", p, vb)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, G, QB), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, QB), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, G, QB, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kstep), (m0, l0, a0), jnp.arange(nkb)
+        )
+        o = acc / jnp.maximum(l, 1e-30)[..., None]  # [B,Hkv,G,QB,hd]
+        return jnp.moveaxis(o, 3, 1)  # [B,QB,Hkv,G,hd]
+
+    out = jax.lax.map(qblock, jnp.arange(nqb))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, S, Hq, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------- full forward
+def attn_forward(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+    ctx: ParallelCtx = LOCAL_CTX,
+    use_pallas: bool = False,
+) -> jax.Array:
+    """Training / prefill attention over the full sequence.  x: [B,S,d]."""
+    hd = cfg.hd
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    n_rep = q.shape[2] // k.shape[2]
+
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        out = kops.flash_attention(
+            q, k, v,
+            causal=cfg.causal,
+            window=spec.window,
+            positions=positions,
+        )
+    elif x.shape[1] >= BLOCKWISE_THRESHOLD:
+        out = _blockwise_attention(
+            q, k, v, positions, cfg.causal, spec.window if cfg.causal else 0
+        )
+    else:
+        k = _repeat_kv(k, n_rep)
+        v = _repeat_kv(v, n_rep)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) / hd**0.5
+        if cfg.causal:
+            allow = positions[None, :] <= positions[:, None]  # [S, S]
+            if spec.window:
+                allow &= positions[None, :] > (positions[:, None] - spec.window)
+            scores = jnp.where(allow[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+    B, S = x.shape[0], x.shape[1]
+    out = out.reshape(B, S, -1)
+    return ctx.psum_tp(out @ p["wo"])
+
+
+# --------------------------------------------------------------------- prefill
+def attn_prefill(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    positions: jax.Array,
+    ctx: ParallelCtx = LOCAL_CTX,
+    capacity: int | None = None,
+) -> tuple[jax.Array, "KVCache"]:
+    """Full-sequence forward that also returns the KV cache for decoding.
+    Window layers keep only the trailing ``window`` keys (ring layout with the
+    cursor at S % W so subsequent decode writes continue the ring).  Global
+    layers pad the cache out to ``capacity`` (the serving context length) so
+    decode has room to append."""
+    hd = cfg.hd
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if S >= BLOCKWISE_THRESHOLD:
+        out = _blockwise_attention(q, k, v, positions, cfg.causal, spec.window)
+    else:
+        n_rep = q.shape[2] // k.shape[2]
+        kk, vv = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) / hd**0.5
+        if cfg.causal:
+            allow = positions[None, :] <= positions[:, None]
+            if spec.window:
+                allow &= positions[None, :] > (positions[:, None] - spec.window)
+            scores = jnp.where(allow[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv)
+    y = ctx.psum_tp(out.reshape(B, S, -1) @ p["wo"])
+
+    kc = jnp.swapaxes(k, 1, 2)  # [B,Hkv,S,hd]
+    vc = jnp.swapaxes(v, 1, 2)
+    if spec.window and spec.window <= S:
+        W = spec.window
+        # ring layout: token at global pos p sits in slot p % W
+        tail_start = S - W
+        tail_k = jax.lax.dynamic_slice_in_dim(kc, tail_start, W, axis=2)
+        tail_v = jax.lax.dynamic_slice_in_dim(vc, tail_start, W, axis=2)
+        shift = tail_start % W
+        kc = jnp.roll(tail_k, shift, axis=2)
+        vc = jnp.roll(tail_v, shift, axis=2)
+    elif spec.window:  # S < window: ring slots 0..S-1, pad to ring capacity
+        tcap = min(spec.window, capacity) if capacity is not None else spec.window
+        pad = tcap - S
+        if pad > 0:
+            kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    elif capacity is not None and capacity > S:
+        pad = capacity - S
+        kc = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vc = jnp.pad(vc, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    cache = KVCache(k=kc, v=vc, cursor=jnp.full((B,), S, jnp.int32))
+    return y, cache
+
+
+# --------------------------------------------------------------------- caching
+class KVCache(NamedTuple):
+    k: jax.Array       # [B, Hkv, C, hd]; C = S_ctx (global) or window (local)
+    v: jax.Array
+    cursor: jax.Array  # [B] int32: #tokens already written (uniform across B;
+                       # kept batch-shaped so pipeline micro-batch slicing works)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[2]
+
+
+def init_kv_cache(
+    batch: int, n_kv_local: int, capacity: int, hd: int, dtype
+) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, n_kv_local, capacity, hd), dtype),
+        v=jnp.zeros((batch, n_kv_local, capacity, hd), dtype),
+        cursor=jnp.zeros((batch,), jnp.int32),
+    )
+
+
+def cache_capacity(spec: LayerSpec, s_ctx: int, seq_shards: int = 1) -> int:
+    """Per-device cache capacity for a layer: rolling window for local layers,
+    a 1/seq_shards slice of the context for (possibly sharded) global layers."""
+    if spec.window:
+        return min(spec.window, s_ctx)
+    assert s_ctx % seq_shards == 0
+    return s_ctx // seq_shards
+
+
+def attn_decode(
+    p: dict,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    ctx: ParallelCtx = LOCAL_CTX,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode.  x: [B,1,d].  Returns (out [B,1,d], new cache).
+
+    Global layers with ctx.seq_shards > 1 hold a 1/n slice of the KV sequence;
+    new tokens are written round-robin by global position, and the partial
+    attention outputs are combined with a (max, sum-exp)-stable psum.
+    """
+    hd = cfg.hd
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, cfg)  # q [B,1,Hq,hd]
+    pos = cache.cursor[0]  # global position of the incoming token (uniform)
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k_new = apply_rope(k_new, posv, cfg.rope_theta)
+
+    sharded = (spec.window == GLOBAL_WINDOW) and ctx.seq_shards > 1
+    C = cache.capacity
+    if sharded:
+        # round-robin ownership by global position keeps shards balanced
+        # during incremental decode.
+        owner = pos % ctx.seq_shards
+        slot = pos // ctx.seq_shards
+        is_mine = owner == ctx.seq_index
+        write_slot = jnp.where(is_mine, slot, 0)
+        k_upd = jax.lax.dynamic_update_slice(
+            cache.k, jnp.swapaxes(k_new, 1, 2), (0, 0, write_slot, 0)
+        )
+        v_upd = jax.lax.dynamic_update_slice(
+            cache.v, jnp.swapaxes(v_new, 1, 2), (0, 0, write_slot, 0)
+        )
+        k_cache = jnp.where(is_mine, k_upd, cache.k)
+        v_cache = jnp.where(is_mine, v_upd, cache.v)
+        # validity: shard i holds slots s with global pos s*shards + i <= pos
+        slots = jnp.arange(C, dtype=jnp.int32)
+        valid = slots * ctx.seq_shards + ctx.seq_index <= pos
+    else:
+        # rolling ring-buffer slot for windowed layers; plain append otherwise
+        # (unwindowed capacity == S_ctx covers all tokens).
+        slot = pos % jnp.int32(C) if spec.window else jnp.minimum(pos, C - 1)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache.k, jnp.swapaxes(k_new, 1, 2), (0, 0, slot, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache.v, jnp.swapaxes(v_new, 1, 2), (0, 0, slot, 0)
+        )
+        slots = jnp.arange(C, dtype=jnp.int32)
+        if spec.window:
+            valid = (slots <= pos) | (pos >= C)  # ring buffer fully valid once wrapped
+        else:
+            valid = slots <= pos
+
+    n_rep = q.shape[2] // k_cache.shape[1]
+    kk = jnp.repeat(k_cache, n_rep, axis=1)  # [B, Hq, C, hd]
+    vv = jnp.repeat(v_cache, n_rep, axis=1)
+    scores = jnp.einsum("bqhd,bhcd->bhqc", q, kk).astype(jnp.float32) / hd**0.5
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+
+    if sharded:
+        m_local = jnp.max(scores, axis=-1)                        # [B,H,1]
+        m = ctx.pmax_seq(m_local) if ctx.pmax_seq is not None else m_local
+        e = jnp.exp(scores - m[..., None])
+        num = jnp.einsum("bhqc,bhcd->bhqd", e, vv.astype(jnp.float32))
+        den = jnp.sum(e, axis=-1)                                 # [B,H,1]
+        num = ctx.psum_seq(num)
+        den = ctx.psum_seq(den)
+        out = (num / den[..., None]).astype(x.dtype)              # [B,H,1,hd]
+    else:
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhqc,bhcd->bhqd", probs, vv.astype(jnp.float32)).astype(x.dtype)
+
+    out = jnp.swapaxes(out, 1, 2).reshape(B, 1, -1)  # [B,1,Hq*hd]
+    out = ctx.psum_tp(out @ p["wo"])
+    return out, KVCache(k=k_cache, v=v_cache, cursor=cache.cursor + 1)

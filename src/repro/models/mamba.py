@@ -1,0 +1,168 @@
+"""Selective state-space (Mamba) mixer.
+
+Training/prefill uses a *chunked* selective scan: an associative scan inside
+fixed-size chunks plus a sequential scan over chunk boundary states, with
+remat on the chunk body, so the [B, S, d_inner, d_state] tensor is never fully
+materialized (TPU VMEM/HBM-friendly — this is the hardware adaptation of the
+CUDA selective-scan kernel).  Decode is the O(1) single-token recurrence.
+
+TP: the d_inner axis is sliced; the (delta, B, C) projection and the output
+projection are row-parallel (ctx.psum_tp).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MambaCfg
+from repro.models.common import ParallelCtx, LOCAL_CTX, dense_init
+
+CHUNK = 256
+
+
+def dt_rank(cfg: ArchConfig) -> int:
+    return -(-cfg.d_model // 16)
+
+
+def init_mamba_params(key, cfg: ArchConfig, dtype) -> dict:
+    mc = cfg.mamba
+    assert mc is not None
+    d = cfg.d_model
+    di = mc.d_inner(d)
+    r = dt_rank(cfg)
+    n = mc.d_state
+    ks = jax.random.split(key, 7)
+    # S4D-real initialization of A
+    a_init = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "w_in_x": dense_init(ks[0], (d, di), dtype),
+        "w_in_z": dense_init(ks[1], (d, di), dtype),
+        "conv_w": dense_init(ks[2], (mc.d_conv, di), dtype, scale=0.1),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_xproj": dense_init(ks[3], (di, r + 2 * n), dtype),
+        "w_dt": dense_init(ks[4], (r, di), dtype, scale=r**-0.5),
+        "b_dt": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(a_init).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "w_out": dense_init(ks[6], (di, d), dtype, scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def _ssm_inputs(p, xc, cfg: ArchConfig, ctx: ParallelCtx):
+    """xc [B,S,di_local] -> delta [B,S,di], Bc/Cc [B,S,N] (psum over TP)."""
+    mc = cfg.mamba
+    r = dt_rank(cfg)
+    n = mc.d_state
+    dbc = ctx.psum_tp(xc @ p["w_xproj"])  # row-parallel partial sums
+    d_raw, b_c, c_c = jnp.split(dbc, [r, r + n], axis=-1)
+    delta = jax.nn.softplus(d_raw @ p["w_dt"] + p["b_dt"])  # [B,S,di_local]
+    return delta, b_c, c_c
+
+
+def _conv1d(xc: jax.Array, conv_w: jax.Array, conv_b: jax.Array) -> jax.Array:
+    """Causal depthwise conv over seq.  xc [B,S,di]; conv_w [k, di]."""
+    k = conv_w.shape[0]
+    pad = jnp.pad(xc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i : i + xc.shape[1], :] * conv_w[i] for i in range(k))
+    return out + conv_b
+
+
+def mamba_forward(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    ctx: ParallelCtx = LOCAL_CTX,
+    return_state: bool = False,
+):
+    """x [B,S,d] -> [B,S,d] (+ MambaCache when return_state, for prefill).
+    S must be a multiple of CHUNK or < CHUNK."""
+    mc = cfg.mamba
+    n = mc.d_state
+    B, S, _ = x.shape
+    xr = x @ p["w_in_x"]  # raw pre-conv activations (tail feeds the decode conv state)
+    z = x @ p["w_in_z"]
+    xc = jax.nn.silu(_conv1d(xr, p["conv_w"], p["conv_b"]))
+    delta, b_c, c_c = _ssm_inputs(p, xc, cfg, ctx)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, N]
+
+    q = min(CHUNK, S)
+    assert S % q == 0, f"seq {S} not a multiple of chunk {q}"
+    nchunks = S // q
+    di = xc.shape[-1]
+
+    def to_chunks(t):
+        return t.reshape(B, nchunks, q, *t.shape[2:]).swapaxes(0, 1)
+
+    xs = jax.tree.map(to_chunks, (xc.astype(jnp.float32), delta.astype(jnp.float32),
+                                  b_c.astype(jnp.float32), c_c.astype(jnp.float32)))
+
+    def chunk_body(h0, chunk):
+        xq, dq, bq, cq = chunk  # [B,q,di], [B,q,di], [B,q,N], [B,q,N]
+        abar = jnp.exp(dq[..., None] * A)  # [B,q,di,N]
+        bx = (dq * xq)[..., None] * bq[:, :, None, :]  # [B,q,di,N]
+        # fold h0 into the first element
+        bx = bx.at[:, 0].add(abar[:, 0] * h0)
+
+        def comb(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a2 * a1, a2 * b1 + b2
+
+        _, hs = jax.lax.associative_scan(comb, (abar, bx), axis=1)
+        y = jnp.einsum("bqdn,bqn->bqd", hs, cq) + p["D"].astype(jnp.float32) * xq
+        return hs[:, -1], y
+
+    h0 = jnp.zeros((B, di, n), jnp.float32)
+    h_last, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, S, di).astype(x.dtype)
+    out = y * jax.nn.silu(z)
+    out = ctx.psum_tp(out @ p["w_out"])
+    if return_state:
+        kc = mc.d_conv - 1
+        cache = MambaCache(conv=xr[:, S - kc :, :], h=h_last)
+        return out, cache
+    return out
+
+
+# ----------------------------------------------------------------------- decode
+class MambaCache(NamedTuple):
+    conv: jax.Array  # [B, d_conv-1, di] trailing inputs
+    h: jax.Array     # [B, di, N] fp32 state
+
+
+def init_mamba_cache(batch: int, cfg: ArchConfig, di_local: int, dtype) -> MambaCache:
+    mc = cfg.mamba
+    return MambaCache(
+        conv=jnp.zeros((batch, mc.d_conv - 1, di_local), dtype),
+        h=jnp.zeros((batch, di_local, mc.d_state), jnp.float32),
+    )
+
+
+def mamba_decode(
+    p: dict,
+    x: jax.Array,
+    cache: MambaCache,
+    *,
+    cfg: ArchConfig,
+    ctx: ParallelCtx = LOCAL_CTX,
+) -> Tuple[jax.Array, MambaCache]:
+    """x [B,1,d] -> ([B,1,d], new cache)."""
+    B = x.shape[0]
+    xc = x @ p["w_in_x"]  # [B,1,di]
+    z = x @ p["w_in_z"]
+    hist = jnp.concatenate([cache.conv, xc], axis=1)  # [B, k, di]
+    conv_out = jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"]
+    xc1 = jax.nn.silu(conv_out)[:, None, :]  # [B,1,di]
+    delta, b_c, c_c = _ssm_inputs(p, xc1, cfg, ctx)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    abar = jnp.exp(delta[:, 0, :, None].astype(jnp.float32) * A)  # [B,di,N]
+    bx = (delta[:, 0] * xc1[:, 0]).astype(jnp.float32)[..., None] * b_c[:, 0, None, :].astype(jnp.float32)
+    h = abar * cache.h + bx
+    y = jnp.einsum("bdn,bn->bd", h, c_c[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32) * xc1[:, 0].astype(jnp.float32)
+    out = (y[:, None, :].astype(x.dtype)) * jax.nn.silu(z)
+    out = ctx.psum_tp(out @ p["w_out"])
+    return out, MambaCache(conv=hist[:, 1:], h=h)

@@ -1,0 +1,34 @@
+"""SwiGLU feed-forward (dense).  Column-parallel gate/up, row-parallel down."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import ParallelCtx, LOCAL_CTX, dense_init
+
+
+def init_mlp_params(key, cfg: ArchConfig, dtype) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (d, f), dtype),
+        "w_up": dense_init(ks[1], (d, f), dtype),
+        "w_down": dense_init(ks[2], (f, d), dtype, scale=0.02 / max(1, cfg.n_layers) ** 0.5),
+    }
+
+
+def mlp_forward(
+    p: dict,
+    x: jax.Array,
+    *,
+    ctx: ParallelCtx = LOCAL_CTX,
+    use_pallas: bool = False,
+) -> jax.Array:
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        h = kops.swiglu(x, p["w_gate"], p["w_up"])
+    else:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    return ctx.psum_tp(h @ p["w_down"])

@@ -1,0 +1,105 @@
+"""Mixture-of-Experts FFN with top-k routing, capacity-based dispatch and
+expert parallelism over the data mesh axis.
+
+Dispatch uses scatter-add into an [E, C, d] buffer (unique slots), so it is
+jit-friendly and differentiable; with expert parallelism the buffer is
+exchanged with two all_to_alls (``ctx.ep_all_to_all`` / ``..._back``), the
+standard EP token shuffle.  The router adds the usual load-balance aux loss
+(Switch/ST-MoE style) plus a small z-loss.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, MoECfg
+from repro.models.common import ParallelCtx, LOCAL_CTX, dense_init
+
+
+def init_moe_params(key, cfg: ArchConfig, dtype, n_experts_local: int | None = None) -> dict:
+    mc = cfg.moe
+    assert mc is not None
+    d, f, e = cfg.d_model, mc.d_ff_expert, mc.n_experts
+    e_local = n_experts_local if n_experts_local is not None else e
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), dtype),
+        "w_gate": dense_init(ks[1], (e_local, d, f), dtype),
+        "w_up": dense_init(ks[2], (e_local, d, f), dtype),
+        "w_down": dense_init(
+            ks[3], (e_local, f, d), dtype, scale=0.02 / max(1, cfg.n_layers) ** 0.5
+        ),
+    }
+
+
+def capacity(n_tokens: int, mc: MoECfg) -> int:
+    c = int(n_tokens * mc.top_k * mc.capacity_factor / mc.n_experts)
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_forward(
+    p: dict,
+    x: jax.Array,
+    *,
+    cfg: ArchConfig,
+    ctx: ParallelCtx = LOCAL_CTX,
+) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar fp32)."""
+    mc = cfg.moe
+    assert mc is not None
+    B, S, d = x.shape
+    T = B * S
+    k = mc.top_k
+    E = mc.n_experts
+    C = capacity(T, mc)
+
+    tokens = x.reshape(T, d)
+    logits = (tokens @ p["router"]).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, sel = jax.lax.top_k(probs, k)  # [T, k]
+    gates = gates / jnp.clip(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # ----- aux losses (load balance + z-loss)
+    onehot = jax.nn.one_hot(sel, E, dtype=jnp.float32)  # [T, k, E]
+    frac_routed = jnp.mean(jnp.sum(onehot, axis=1), axis=0)  # [E]
+    mean_prob = jnp.mean(probs, axis=0)  # [E]
+    lb_loss = E * jnp.sum(frac_routed * mean_prob)
+    z_loss = 1e-3 * jnp.mean(jnp.square(jax.scipy.special.logsumexp(logits, axis=-1)))
+    aux = mc.router_aux_weight * lb_loss + z_loss
+
+    # ----- slot assignment: token-major priority within each expert
+    flat_sel = sel.reshape(T * k)
+    flat_onehot = onehot.reshape(T * k, E)
+    slot = (jnp.cumsum(flat_onehot, axis=0) - flat_onehot)  # [T*k, E]
+    slot = jnp.sum(slot * flat_onehot, axis=-1).astype(jnp.int32)  # [T*k]
+    keep = slot < C
+    dispatch_idx = jnp.where(keep, flat_sel * C + slot, E * C)  # overflow bucket
+
+    # ----- dispatch: [E*C (+1 overflow), d]
+    x_rep = jnp.repeat(tokens, k, axis=0)  # [T*k, d]
+    buf = jnp.zeros((E * C + 1, d), dtype=x.dtype)
+    buf = buf.at[dispatch_idx].add(x_rep * keep[:, None].astype(x.dtype))
+    expert_in = buf[: E * C].reshape(E, C, d)
+
+    # ----- expert parallelism: [E, C, d] -> [E_local, C * dp, d]
+    if ctx.ep_all_to_all is not None:
+        expert_in = ctx.ep_all_to_all(expert_in)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["w_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in, p["w_up"])
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+    expert_out = ctx.psum_tp(expert_out)  # TP row-parallel d_ff slices
+
+    if ctx.ep_all_to_all_back is not None:
+        expert_out = ctx.ep_all_to_all_back(expert_out)  # [E, C, d]
+
+    # ----- combine
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(E * C, d), jnp.zeros((1, d), expert_out.dtype)], axis=0
+    )
+    gathered = flat_out[dispatch_idx]  # [T*k, d]
+    weights = (gates.reshape(T * k) * keep).astype(gathered.dtype)
+    out = jnp.sum((gathered * weights[:, None]).reshape(T, k, d), axis=1)
+    return out.reshape(B, S, d), aux.astype(jnp.float32)

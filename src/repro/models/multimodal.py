@@ -1,0 +1,28 @@
+"""Modality frontend STUBS (the one sanctioned carve-out).
+
+[audio] hubert-xlarge: the mel-spectrogram + conv feature encoder is stubbed;
+we synthesize frame embeddings [B, S, d_model] directly (deterministic PRNG),
+plus codebook labels in [0, vocab).
+
+[vlm] internvl2-26b: the InternViT encoder + MLP projector are stubbed; we
+synthesize patch embeddings [B, n_patches, d_model] that the language model
+consumes in its leading positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def synth_audio_frames(key, cfg: ArchConfig, batch: int, seq: int) -> jax.Array:
+    """Stub for the wav2vec2/HuBERT conv feature extractor output."""
+    return 0.1 * jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+
+
+def synth_patch_embeds(key, cfg: ArchConfig, batch: int) -> jax.Array:
+    """Stub for the ViT patch/projector output (n_frontend_tokens patches)."""
+    return 0.1 * jax.random.normal(
+        key, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32
+    )

@@ -1,0 +1,56 @@
+"""Optimizers (pure-JAX, per-leaf).  Master weights live in fp32 inside the
+optimizer state; with ZeRO-1 (train.train_step) each data-shard owns 1/D of
+every master leaf — the paper's scatter-reduce synchronization then becomes
+reduce-scatter(grads) -> shard update -> all-gather(params).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer:
+    def init_state(self, master: jax.Array) -> dict:  # pragma: no cover
+        raise NotImplementedError
+
+    def update(self, g, master, state, step) -> Tuple[jax.Array, dict]:  # pragma: no cover
+        raise NotImplementedError
+
+
+@dataclass(frozen=True)
+class SGD(Optimizer):
+    lr: float = 0.01
+    momentum: float = 0.9
+
+    def init_state(self, master):
+        return {"mu": jnp.zeros_like(master)}
+
+    def update(self, g, master, state, step):
+        g = g.astype(jnp.float32)
+        mu = self.momentum * state["mu"] + g
+        return master - self.lr * mu, {"mu": mu}
+
+
+@dataclass(frozen=True)
+class AdamW(Optimizer):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def init_state(self, master):
+        return {"m": jnp.zeros_like(master), "v": jnp.zeros_like(master)}
+
+    def update(self, g, master, state, step):
+        g = g.astype(jnp.float32)
+        step = step.astype(jnp.float32) + 1.0
+        m = self.b1 * state["m"] + (1 - self.b1) * g
+        v = self.b2 * state["v"] + (1 - self.b2) * jnp.square(g)
+        mhat = m / (1 - self.b1**step)
+        vhat = v / (1 - self.b2**step)
+        upd = mhat / (jnp.sqrt(vhat) + self.eps) + self.weight_decay * master
+        return master - self.lr * upd, {"m": m, "v": v}

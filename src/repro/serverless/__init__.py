@@ -1,0 +1,1 @@
+from repro.serverless.platform import AWS_LAMBDA, ALIBABA_FC, Platform  # noqa: F401

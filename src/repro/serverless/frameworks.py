@@ -1,0 +1,147 @@
+"""The evaluated training designs (§5.1 baselines + FuncPipe itself), each a
+resource-allocation policy over the simulator.
+
+  LambdaML     — pure DP; max memory per worker, max local batch in memory.
+  HybridPS     — DP with a parameter-server VM for synchronization.
+  LambdaML-GA / HybridPS-GA — gradient accumulation (micro-batch 1) with the
+                 minimum feasible memory per worker.
+  FuncPipe     — pipeline plan from the MIQP co-optimizer (core.planner).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.partition import ModelProfile
+from repro.core import planner
+from repro.serverless.platform import Platform
+from repro.serverless.simulator import SimResult, simulate_data_parallel, simulate_funcpipe
+
+
+def _max_local_batch(profile, platform, mem, micro_batch, n_workers) -> int:
+    arr = profile.arrays()
+    per_mb_act = arr["a"].sum()  # bytes per micro-batch
+    sync_f = 4 if n_workers > 1 else 2
+    budget = mem - arr["s"].sum() * sync_f - platform.base_memory
+    if budget <= 0:
+        return 0
+    n_mb = int(budget // per_mb_act)
+    return n_mb * micro_batch
+
+
+def lambda_ml(
+    profile: ModelProfile,
+    platform: Platform,
+    global_batch: int,
+    *,
+    micro_batch: int = 4,
+    sync: str = "scatter_reduce",
+    grad_accum: bool = False,
+    contention: bool = False,
+    ps: bool = False,
+) -> Optional[SimResult]:
+    """LambdaML policy: max memory, max local batch -> fewest workers."""
+    J = len(platform.memory_options)
+    if grad_accum:
+        # min memory that fits ONE micro-batch of size 1
+        arr = profile.arrays()
+        per_sample_act = arr["a"].sum() / micro_batch
+        for j in range(J):
+            mem = platform.memory_options[j]
+            if per_sample_act + arr["s"].sum() * 4 + platform.base_memory <= mem:
+                break
+        else:
+            return None
+        # same worker count as non-GA LambdaML for comparability (paper §5.1)
+        base = lambda_ml(profile, platform, global_batch, micro_batch=micro_batch,
+                         sync=sync, contention=contention, ps=ps)
+        if base is None:
+            return None
+        n_workers = base.n_workers
+        return simulate_data_parallel(
+            profile, platform, n_workers=n_workers, mem_index=j,
+            samples_per_worker=global_batch // n_workers, micro_batch=1,
+            sync="ps" if ps else sync, grad_accum=True, contention=contention,
+        )
+    j = J - 1
+    mem = platform.memory_options[j]
+    local = _max_local_batch(profile, platform, mem, micro_batch, n_workers=2)
+    if local <= 0:
+        return None
+    local = min(local, global_batch)
+    n_workers = max(1, -(-global_batch // local))
+    local = global_batch // n_workers
+    return simulate_data_parallel(
+        profile, platform, n_workers=n_workers, mem_index=j,
+        samples_per_worker=local, micro_batch=micro_batch,
+        sync="ps" if ps else sync, contention=contention,
+    )
+
+
+def hybrid_ps(profile, platform, global_batch, *, micro_batch: int = 4,
+              grad_accum: bool = False, contention: bool = False):
+    return lambda_ml(profile, platform, global_batch, micro_batch=micro_batch,
+                     grad_accum=grad_accum, contention=contention, ps=True)
+
+
+@dataclass(frozen=True)
+class FuncPipeResult:
+    plans: List[planner.PlanResult]
+    sims: List[SimResult]
+    recommended: int  # index into plans/sims
+
+    @property
+    def recommended_sim(self) -> SimResult:
+        return self.sims[self.recommended]
+
+
+# the paper's four weight pairs (§5.1); scaled: cost in $, time in s
+ALPHA_PAIRS: Tuple[Tuple[float, float], ...] = (
+    (1.0, 0.0),
+    (1.0, 2**16 * 1e-9),
+    (1.0, 2**19 * 1e-9),
+    (1.0, 2**22 * 1e-9),
+)
+
+
+def funcpipe(
+    profile: ModelProfile,
+    platform: Platform,
+    global_batch: int,
+    *,
+    micro_batch: int = 4,
+    alphas: Sequence[Tuple[float, float]] = ALPHA_PAIRS,
+    merge_to: int = 8,
+    pipelined_sync: bool = True,
+    contention: bool = False,
+    d_options: Sequence[int] = planner.DEFAULT_D_OPTIONS,
+) -> Optional[FuncPipeResult]:
+    M = max(1, global_batch // micro_batch)
+    plans = []
+    for alpha in alphas:
+        r = planner.solve(profile, platform, alpha=alpha, total_micro_batches=M,
+                          merge_to=merge_to, pipelined_sync=pipelined_sync,
+                          d_options=d_options)
+        if r is not None:
+            plans.append(r)
+    if not plans:
+        return None
+    # dedupe identical configs
+    uniq = []
+    seen = set()
+    for r in plans:
+        key = (r.config.x, r.config.d, r.config.z)
+        if key not in seen:
+            seen.add(key)
+            uniq.append(r)
+    sims = [
+        simulate_funcpipe(r.profile, platform, r.config, M,
+                          pipelined_sync=pipelined_sync, contention=contention)
+        for r in uniq
+    ]
+    rec_plan = planner.recommend(uniq)
+    rec = uniq.index(rec_plan)
+    return FuncPipeResult(plans=uniq, sims=sims, recommended=rec)

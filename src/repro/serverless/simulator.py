@@ -1,0 +1,217 @@
+"""Discrete-event simulation of serverless training (independent of the
+closed-form performance model — used to validate it, Table 3 analog).
+
+Each pipeline worker owns three serial resources: CPU, uplink, downlink.
+Tasks are processed in the GPipe order of Fig 3 (all micro-batch forwards,
+then reversed backwards, then sync), so the event-driven simulation reduces
+to a longest-path DP over task end-times with per-resource serialization.
+
+Also simulates the data-parallel baselines (LambdaML / HybridPS, ±gradient
+accumulation) under the same platform model.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.partition import ModelProfile, stages_of
+from repro.core.perfmodel import (
+    Config,
+    sync_time_nonpipelined,
+    sync_time_pipelined,
+)
+from repro.serverless.platform import GB, Platform
+
+
+@dataclass(frozen=True)
+class SimResult:
+    t_iter: float
+    cost: float
+    n_workers: int
+    total_mem_gb: float
+    breakdown: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def throughput(self) -> float:  # samples/s given meta in breakdown
+        return self.breakdown.get("samples", 0.0) / self.t_iter
+
+
+def bandwidth_contention(n_workers: int, knee: int = 16, exp: float = 0.25) -> float:
+    """Per-worker bandwidth multiplier: platforms co-locate functions, so
+    per-function bandwidth degrades past ~``knee`` concurrent workers
+    (paper §5.4 observation)."""
+    if n_workers <= knee:
+        return 1.0
+    return (knee / n_workers) ** exp
+
+
+def storage_capped_bw(platform: Platform, w: float, n_workers: int) -> float:
+    """§5.7: Alibaba OSS (and Azure storage) cap TOTAL concurrent storage
+    bandwidth; with n workers hitting storage at once each sees at most
+    cap/n.  AWS S3 is modeled uncapped (paper §5.1)."""
+    cap = platform.storage_total_bandwidth
+    if cap is None or n_workers <= 0:
+        return w
+    return min(w, cap / n_workers)
+
+
+# ------------------------------------------------------------------- FuncPipe
+def simulate_funcpipe(
+    profile: ModelProfile,
+    platform: Platform,
+    config: Config,
+    total_micro_batches: int,
+    *,
+    pipelined_sync: bool = True,
+    contention: bool = False,
+) -> SimResult:
+    arr = profile.arrays()
+    x = np.asarray(config.x)
+    d = config.d
+    mu = max(1, total_micro_batches // d)
+    stages = stages_of(x)
+    S = len(stages)
+    z = np.asarray(config.z)
+    beta = platform.contention_beta
+    t_lat = platform.storage_latency
+
+    n_workers = S * d
+    bw_mult = bandwidth_contention(n_workers) if contention else 1.0
+
+    # per-stage aggregates (memory option constant within stage)
+    t_fc = np.array([beta * arr["Tf"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
+    t_bc = np.array([beta * arr["Tb"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
+    w = np.array([
+        storage_capped_bw(
+            platform, platform.bandwidth(platform.memory_options[z[lo]]) * bw_mult,
+            n_workers)
+        for lo, hi in stages
+    ])
+    out_b = np.array([arr["o"][hi] for lo, hi in stages])          # fwd boundary
+    grad_b = np.array([arr["g"][lo] for lo, hi in stages])         # bwd boundary
+    s_stage = np.array([arr["s"][lo:hi + 1].sum() for lo, hi in stages])
+
+    t_up_f = out_b / w + t_lat      # stage s uploads its output
+    t_dn_f = np.empty(S)
+    t_dn_f[1:] = out_b[:-1] / w[1:] + t_lat
+    t_dn_f[0] = 0.0
+    t_up_b = grad_b / w + t_lat     # stage s uploads grad toward s-1
+    t_dn_b = np.empty(S)
+    t_dn_b[:-1] = grad_b[1:] / w[:-1] + t_lat
+    t_dn_b[-1] = 0.0
+
+    NEG = 0.0
+    fwd_d_end = np.zeros((S, mu))
+    fwd_c_end = np.zeros((S, mu))
+    fwd_u_end = np.zeros((S, mu))
+    for m in range(mu):
+        for s in range(S):
+            if s == 0:
+                ready = 0.0
+            else:
+                prev_dn = fwd_d_end[s, m - 1] if m else NEG
+                fwd_d_end[s, m] = max(fwd_u_end[s - 1, m], prev_dn) + t_dn_f[s]
+                ready = fwd_d_end[s, m]
+            prev_c = fwd_c_end[s, m - 1] if m else NEG
+            fwd_c_end[s, m] = max(ready, prev_c) + t_fc[s]
+            if s < S - 1:
+                prev_u = fwd_u_end[s, m - 1] if m else NEG
+                fwd_u_end[s, m] = max(fwd_c_end[s, m], prev_u) + t_up_f[s]
+
+    bwd_d_end = np.zeros((S, mu))
+    bwd_c_end = np.zeros((S, mu))
+    bwd_u_end = np.zeros((S, mu))
+    for mi, m in enumerate(range(mu - 1, -1, -1)):  # reversed micro-batch order
+        for s in range(S - 1, -1, -1):
+            if s == S - 1:
+                ready = fwd_c_end[s, mu - 1]
+            else:
+                prev_dn = bwd_d_end[s, m + 1] if mi else NEG
+                bwd_d_end[s, m] = max(bwd_u_end[s + 1, m], prev_dn, fwd_u_end[s, mu - 1]) + t_dn_b[s]
+                ready = bwd_d_end[s, m]
+            prev_c = bwd_c_end[s, m + 1] if mi else fwd_c_end[s, mu - 1]
+            bwd_c_end[s, m] = max(ready, prev_c) + t_bc[s]
+            if s > 0:
+                prev_u = bwd_u_end[s, m + 1] if mi else fwd_u_end[s, mu - 1]
+                bwd_u_end[s, m] = max(bwd_c_end[s, m], prev_u) + t_up_b[s]
+
+    sync_fn = sync_time_pipelined if pipelined_sync else sync_time_nonpipelined
+    end = 0.0
+    sync_total = 0.0
+    for s in range(S):
+        done = bwd_c_end[s, 0] if S == 1 else max(bwd_c_end[s, 0], bwd_u_end[s, 0] if s > 0 else 0.0)
+        ts = sync_fn(s_stage[s], w[s], d, t_lat) if d > 1 else 0.0
+        sync_total = max(sync_total, ts)
+        end = max(end, done + ts)
+
+    mem_total = d * sum(platform.memory_options[z[lo]] for lo, hi in stages)
+    cost = platform.price_per_gb_s * (mem_total / GB) * end
+    comp = float(t_fc.sum() + t_bc.sum())
+    return SimResult(
+        t_iter=float(end),
+        cost=float(cost),
+        n_workers=n_workers,
+        total_mem_gb=mem_total / GB,
+        breakdown={
+            "compute": comp,
+            "pipeline_comm": float(end - comp - sync_total) if S > 1 else 0.0,
+            "sync": float(sync_total),
+        },
+    )
+
+
+# ------------------------------------------------------- data-parallel designs
+def simulate_data_parallel(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    n_workers: int,
+    mem_index: int,
+    samples_per_worker: int,
+    micro_batch: int,
+    sync: str = "scatter_reduce",          # scatter_reduce | pipelined | ps
+    grad_accum: bool = False,
+    ps_bandwidth: float = 10e9 / 8,
+    ps_price_per_s: float = 1.53 / 3600.0,  # c5.9xlarge
+    contention: bool = False,
+) -> SimResult:
+    """One iteration of DP training (LambdaML / HybridPS + GA variants)."""
+    arr = profile.arrays()
+    mem = platform.memory_options[mem_index]
+    w = platform.bandwidth(mem)
+    if contention:
+        w *= bandwidth_contention(n_workers)
+    w_storage = storage_capped_bw(platform, w, n_workers)
+    s_grad = arr["s"].sum()
+    t_lat = platform.storage_latency
+
+    n_mb = max(1, samples_per_worker // micro_batch)
+    comp = (arr["Tf"][:, mem_index].sum() + arr["Tb"][:, mem_index].sum()) * n_mb
+    if grad_accum:
+        comp *= 1.10  # per-step overhead of accumulation
+
+    if n_workers == 1:
+        sync_t = 0.0
+    elif sync == "ps":
+        eff = min(w, ps_bandwidth / n_workers)
+        sync_t = 2 * s_grad / eff + 2 * t_lat
+    elif sync == "pipelined":
+        sync_t = sync_time_pipelined(s_grad, w_storage, n_workers, t_lat)
+    else:
+        sync_t = sync_time_nonpipelined(s_grad, w_storage, n_workers, t_lat)
+
+    t_iter = comp + sync_t
+    cost = platform.price_per_gb_s * (mem / GB) * t_iter * n_workers
+    if sync == "ps" and n_workers > 1:
+        cost += ps_price_per_s * t_iter
+    return SimResult(
+        t_iter=float(t_iter),
+        cost=float(cost),
+        n_workers=n_workers,
+        total_mem_gb=n_workers * mem / GB,
+        breakdown={"compute": float(comp), "sync": float(sync_t),
+                   "samples": float(n_workers * samples_per_worker)},
+    )

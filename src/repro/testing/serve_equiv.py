@@ -1,0 +1,102 @@
+"""Multi-device serving equivalence: pipelined prefill/decode == single-device.
+
+Run with fake devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        python -m repro.testing.serve_equiv [arch] [stages] [tensor] [seq_shards]
+"""
+import os
+import sys
+
+if __name__ == "__main__" and "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    )
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.core import sharding
+from repro.core.plan import make_plan
+from repro.models import registry
+from repro.train import serve_step as srv
+
+
+def run(arch_id="phi3-mini-3.8b", stages=4, tensor=1, seq_shards=1,
+        n_decode=6, seed=0, tol=2e-3):
+    model_ax = stages * tensor
+    data_ax = 8 // model_ax
+    mesh = jax.make_mesh((data_ax, model_ax), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    cfg = get_config(arch_id).reduced()
+    if cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=float(cfg.moe.n_experts))
+        )
+    cfg = dataclasses.replace(cfg, stages=stages, tensor=tensor)
+    S_pre = 64
+    s_ctx = S_pre + n_decode
+    B = 1 if seq_shards > 1 else 8
+    # decode shape determines cache layout; seq_len == capacity
+    dshape = InputShape("serve_equiv", s_ctx, B, "decode")
+    pshape = InputShape("serve_equiv_p", S_pre, B, "prefill")
+    plan = make_plan(cfg, dshape, data=data_ax, model=model_ax, microbatches=1)
+    if seq_shards > 1:
+        assert plan.seq_shards == data_ax, plan
+    pplan = dataclasses.replace(plan, seq_shards=plan.seq_shards)
+
+    key = jax.random.PRNGKey(seed)
+    base = registry.init_params(cfg, key)
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (B, s_ctx), 0,
+                              cfg.vocab_size, jnp.int32)
+    from_scratch = plan.seq_shards > 1  # sharded caches: decode-only path
+
+    # ---- single-device reference
+    ref_steps = []
+    if from_scratch:
+        ref_caches = registry.init_decode_caches(cfg, B, s_ctx)
+        e_pre = 0.0
+        dec_range = range(0, n_decode)
+        for t in dec_range:
+            lg, ref_caches = registry.decode_step(cfg, base, ref_caches, toks[:, t:t + 1])
+            ref_steps.append(lg)
+    else:
+        ref_logits_pre, ref_caches = registry.prefill(
+            cfg, base, {"tokens": toks[:, :S_pre]}, capacity=s_ctx)
+        dec_range = range(S_pre, S_pre + n_decode)
+        for t in dec_range:
+            lg, ref_caches = registry.decode_step(cfg, base, ref_caches, toks[:, t:t + 1])
+            ref_steps.append(lg)
+
+    # ---- pipelined
+    with jax.set_mesh(mesh):
+        params = sharding.to_pipeline_layout(cfg, plan, base)
+        if from_scratch:
+            caches = srv.init_caches(cfg, plan, dshape)
+            e_pre = 0.0
+        else:
+            prefill = srv.make_prefill_step(cfg, pplan, mesh, pshape, capacity=s_ctx)
+            logits_pre, caches = prefill(params, {"tokens": toks[:, :S_pre]})
+            e_pre = float(jnp.max(jnp.abs(logits_pre - ref_logits_pre)))
+        decode = srv.make_decode_step(cfg, plan, mesh, dshape, donate=False)
+        steps = []
+        for t in dec_range:
+            lg, caches = decode(params, caches, toks[:, t:t + 1])
+            steps.append(lg)
+
+    e_dec = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(steps, ref_steps))
+    print(f"[serve_equiv] {arch_id} stages={stages} tp={tensor} seq_shards={plan.seq_shards} "
+          f"prefill_err={e_pre:.2e} decode_err={e_dec:.2e}")
+    return e_pre < tol and e_dec < tol
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "phi3-mini-3.8b"
+    stages = int(sys.argv[2]) if len(sys.argv) > 2 else 4
+    tensor = int(sys.argv[3]) if len(sys.argv) > 3 else 1
+    seq_shards = int(sys.argv[4]) if len(sys.argv) > 4 else 1
+    sys.exit(0 if run(arch, stages, tensor, seq_shards) else 1)

@@ -1,0 +1,2 @@
+from repro.train.train_step import make_train_step, make_train_state  # noqa: F401
+from repro.train.serve_step import make_decode_step, make_prefill_step  # noqa: F401

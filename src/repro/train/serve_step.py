@@ -1,0 +1,176 @@
+"""Serving steps: pipelined prefill and single-token decode.
+
+Cache layout mirrors the parameter layout: every cache leaf is
+[model_axis, ppstage, B, ...], sharded P('model', None, <batch axes>, ...).
+For ``long_500k`` (global batch 1) the batch is replicated and the *capacity*
+dim of global-attention KV leaves is sharded over 'data' instead
+(flash-decode partial-softmax combination across the data axis).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape, ATTN, GLOBAL_WINDOW
+from repro.core import sharding
+from repro.core.pipeline import (
+    _abstract_stage_caches,
+    pipeline_decode_step,
+    pipeline_prefill,
+)
+from repro.core.plan import PipelinePlan
+from repro.models import attention
+from repro.train.train_step import batch_pspecs
+
+
+def _batch_axes(plan: PipelinePlan):
+    if plan.seq_shards > 1:
+        return None  # batch fully replicated; KV seq sharded over pod x data
+    return ("pod", "data") if plan.pods > 1 else "data"
+
+
+def cache_specs(cfg: ArchConfig, plan: PipelinePlan, shape: InputShape):
+    """(abstract cache tree [model,pp,B,...], PartitionSpec tree)."""
+    B = shape.global_batch
+    s_ctx = shape.seq_len
+    dtype = jnp.dtype(cfg.param_dtype)
+    baxis = _batch_axes(plan)
+    B_rep = B if plan.seq_shards > 1 else B  # global batch dim in global arrays
+
+    # per-device local caches (what pipeline code sees), then lift to global
+    B_local = B if plan.seq_shards > 1 else B // (plan.pods * plan.data)
+    local = jax.eval_shape(
+        lambda: _abstract_stage_caches(cfg, plan, B_local, s_ctx, dtype)
+    )
+
+    def lift(sds, pos_j, leaf_name):
+        spec_j = cfg.period[pos_j]
+        shp = list(sds.shape)  # [pp, B_local, ...]
+        axes: list = ["model", None] + [None] * (len(shp) - 1)
+        # scale batch dim back to global
+        if plan.seq_shards > 1:
+            axes[2] = None  # replicated batch
+        else:
+            axes[2] = baxis
+            shp[1] = B
+        # seq-sharded global-attn KV: capacity dim over (pod x) data
+        if (
+            plan.seq_shards > 1
+            and spec_j.mixer == ATTN
+            and spec_j.window == GLOBAL_WINDOW
+            and leaf_name in ("k", "v")
+        ):
+            shp[3] *= plan.seq_shards  # [pp,B,kv,C,hd] -> global C
+            axes[4] = ("pod", "data") if plan.pods > 1 else "data"
+        return (
+            jax.ShapeDtypeStruct((plan.model_axis, *shp), sds.dtype),
+            P(*axes),
+        )
+
+    shapes, specs = [], []
+    for j, pos_cache in enumerate(local):
+        if hasattr(pos_cache, "_fields"):  # NamedTuple cache
+            names = pos_cache._fields
+            lifted = {n: lift(getattr(pos_cache, n), j, n) for n in names}
+            shapes.append(type(pos_cache)(**{n: lifted[n][0] for n in names}))
+            specs.append(type(pos_cache)(**{n: lifted[n][1] for n in names}))
+        else:  # pragma: no cover
+            raise TypeError(type(pos_cache))
+    return tuple(shapes), tuple(specs)
+
+
+def init_caches(cfg: ArchConfig, plan: PipelinePlan, shape: InputShape):
+    shapes, _ = cache_specs(cfg, plan, shape)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+
+
+def make_decode_step(
+    cfg: ArchConfig,
+    plan: PipelinePlan,
+    mesh: Mesh,
+    shape: InputShape,
+    *,
+    donate: bool = True,
+):
+    """jit-able (params, caches, tokens) -> (logits, caches)."""
+    has_pod = "pod" in mesh.axis_names
+    param_specs = sharding.pipeline_param_specs(cfg, plan)
+    _, cspecs = cache_specs(cfg, plan, shape)
+    mask = sharding.layer_mask_array(cfg, plan)
+    baxis = _batch_axes(plan)
+    tok_spec = P(baxis, None)
+
+    def device_fn(params, caches, tokens, mask_arr):
+        params_loc = {
+            k: (jax.tree.map(lambda a: a[0], v) if k == "layers" else v)
+            for k, v in params.items()
+        }
+        caches_loc = jax.tree.map(lambda a: a[0], caches)
+        logits, new_caches = pipeline_decode_step(
+            cfg, plan, params_loc, mask_arr[0], caches_loc, tokens, has_pod=has_pod
+        )
+        new_caches = jax.tree.map(lambda a: a[None], new_caches)
+        return logits, new_caches
+
+    smapped = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(param_specs, cspecs, tok_spec, P("model", None, None)),
+        out_specs=(tok_spec, cspecs),
+        check_vma=False,
+    )
+
+    def step(params, caches, tokens):
+        return smapped(params, caches, tokens, jnp.asarray(mask))
+
+    donate_args = (1,) if donate else ()
+    return jax.jit(step, donate_argnums=donate_args)
+
+
+def make_prefill_step(
+    cfg: ArchConfig,
+    plan: PipelinePlan,
+    mesh: Mesh,
+    shape: InputShape,
+    *,
+    capacity: Optional[int] = None,
+):
+    """jit-able (params, batch) -> (last-pos logits, caches)."""
+    has_pod = "pod" in mesh.axis_names
+    param_specs = sharding.pipeline_param_specs(cfg, plan)
+    b_specs = batch_pspecs(cfg, shape, plan)
+    # prefill caches have capacity == seq (or window); build matching specs
+    cap_shape = InputShape(shape.name, capacity or shape.seq_len, shape.global_batch, "decode")
+    _, cspecs = cache_specs(cfg, plan, cap_shape)
+    mask = sharding.layer_mask_array(cfg, plan)
+    baxis = _batch_axes(plan)
+
+    def device_fn(params, batch, mask_arr):
+        params_loc = {
+            k: (jax.tree.map(lambda a: a[0], v) if k == "layers" else v)
+            for k, v in params.items()
+        }
+        logits, caches = pipeline_prefill(
+            cfg, plan, params_loc, mask_arr[0], batch,
+            capacity=capacity or shape.seq_len, has_pod=has_pod,
+        )
+        caches = jax.tree.map(lambda a: a[None], caches)
+        return logits, caches
+
+    smapped = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(param_specs, b_specs, P("model", None, None)),
+        out_specs=(P(baxis, None, None), cspecs),
+        check_vma=False,
+    )
+
+    def step(params, batch):
+        return smapped(params, batch, jnp.asarray(mask))
+
+    return jax.jit(step)

@@ -1,0 +1,268 @@
+"""Distributed train step: pipeline forward/backward + the paper's
+scatter-reduce gradient synchronization + ZeRO-1 sharded optimizer.
+
+Per leaf (see core.sharding.grad_sync_specs):
+  1. tp sync (replicated / kv-shared slices) over 'model' subgroups,
+  2. psum over 'pod' (pure DP between pods),
+  3. reduce-scatter over 'data' with the uni- or bi-directional ring
+     (paper eq (1) vs eq (2) — ``bidirectional=True`` is FuncPipe's schedule),
+  4. fp32 master update on the local 1/D shard,
+  5. ring all-gather of the updated (bf16) parameters.
+MoE expert leaves skip 3/5: expert parallelism already localizes their grads.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.core import collectives as cc
+from repro.core import sharding
+from repro.core.pipeline import pipeline_train_loss, _unbox
+from repro.core.plan import PipelinePlan
+from repro.models import registry
+from repro.optim import Optimizer
+
+
+def _rs_chunk(n: int, d: int) -> int:
+    return -(-n // d)
+
+
+def grad_sync_tree(cfg: ArchConfig, plan: PipelinePlan):
+    """grad_sync_specs extended with the globally-replicated leaves.
+    tp_mode == 'model' marks leaves replicated across the whole model axis."""
+    syncs = sharding.grad_sync_specs(cfg, plan)
+    glob = sharding.GradSync(data_rs=True, tp_mode="model")
+    out = {"embed": glob, "final_norm": glob, "layers": syncs["layers"]}
+    if not cfg.tie_embeddings:
+        out["head"] = glob
+    return out
+
+
+# ------------------------------------------------------------------ opt state
+def _master_shape(p_shape, p_size, gs: sharding.GradSync, plan: PipelinePlan):
+    if not gs.data_rs:
+        return p_shape
+    rows = 1 if gs.tp_mode == "model" else p_shape[0]
+    c = _rs_chunk(p_size // rows, plan.data)
+    return (rows, plan.data, c)
+
+
+def init_opt_state(cfg: ArchConfig, plan: PipelinePlan, optimizer: Optimizer, params):
+    """Concrete optimizer state from laid-out (global) params."""
+    syncs = grad_sync_tree(cfg, plan)
+
+    def one(p, gs: sharding.GradSync):
+        if gs.data_rs:
+            rows, data, c = _master_shape(p.shape, p.size, gs, plan)
+            flat = p.astype(jnp.float32).reshape(rows, -1)
+            pad = data * c - flat.shape[1]
+            flat = jnp.pad(flat, ((0, 0), (0, pad)))
+            master = flat.reshape(rows, data, c)
+        else:
+            master = p.astype(jnp.float32)
+        return {"master": master, **optimizer.init_state(master)}
+
+    return jax.tree.map(one, params, syncs)
+
+
+def opt_state_specs(cfg: ArchConfig, plan: PipelinePlan, optimizer: Optimizer):
+    """(abstract tree, PartitionSpec tree) for the optimizer state."""
+    shapes = sharding.abstract_layout_shapes(cfg, plan)
+    syncs = grad_sync_tree(cfg, plan)
+    param_pspecs = sharding.pipeline_param_specs(cfg, plan)
+    sub_keys = list(
+        jax.eval_shape(
+            lambda x: optimizer.init_state(x), jax.ShapeDtypeStruct((1,), jnp.float32)
+        ).keys()
+    )
+
+    def one(sds, gs: sharding.GradSync, ps):
+        if gs.data_rs:
+            shape = _master_shape(sds.shape, int(np.prod(sds.shape)), gs, plan)
+            spec = P("model", "data", None) if gs.tp_mode != "model" else P(None, "data", None)
+        else:
+            shape, spec = sds.shape, ps
+        keys = ["master"] + sub_keys
+        return (
+            {k: jax.ShapeDtypeStruct(shape, jnp.float32) for k in keys},
+            {k: spec for k in keys},
+        )
+
+    flat_p, treedef = jax.tree.flatten(shapes)
+    flat_g = jax.tree.leaves(syncs)
+    flat_ps = jax.tree.leaves(
+        param_pspecs, is_leaf=lambda x: isinstance(x, P)
+    )
+    assert len(flat_p) == len(flat_g) == len(flat_ps)
+    pairs = [one(s, g, ps) for s, g, ps in zip(flat_p, flat_g, flat_ps)]
+    st = jax.tree.unflatten(treedef, [a for a, _ in pairs])
+    sp = jax.tree.unflatten(treedef, [b for _, b in pairs])
+    return st, sp
+
+
+# ------------------------------------------------------------------ the step
+def batch_pspecs(cfg: ArchConfig, shape: InputShape, plan: PipelinePlan):
+    """PartitionSpecs for batch leaves (batch dim over pod+data, or replicated
+    when the batch is smaller than the data axis — long-context decode)."""
+    from repro.data.specs import input_specs
+
+    specs = input_specs(cfg, shape)
+    if plan.seq_shards > 1:
+        baxis = None  # batch fully replicated; KV seq sharded over pod x data
+    else:
+        baxis = ("pod", "data") if plan.pods > 1 else "data"
+    return jax.tree.map(lambda s: P(baxis, *([None] * (len(s.shape) - 1))), specs)
+
+
+def _apply_updates(cfg, plan, optimizer, grads, params_loc, opt_loc, syncs, step,
+                   *, bidirectional: bool, has_pod: bool):
+    """Per-device gradient sync + ZeRO-1 update.  All args unboxed/local."""
+    tpg = cc.tp_groups(plan.stages, plan.tensor)
+    kvg = None
+    if plan.tensor > 1 and cfg.n_kv_heads < plan.tensor:
+        share = plan.tensor // cfg.n_kv_heads
+        kvg = [
+            [s * plan.tensor + g * share + u for u in range(share)]
+            for s in range(plan.stages)
+            for g in range(cfg.n_kv_heads)
+        ]
+
+    def one(g, p, opt, gs: sharding.GradSync):
+        # NB: the differentiated loss is the per-device *local* contribution
+        # (see pipeline_train_loss), so every sync here is a plain SUM of
+        # distinct contributions — lane-partitioned CE makes tp lanes sum to
+        # the full gradient for replicated leaves too.
+        g = g.astype(jnp.float32)
+        if gs.tp_mode == "all" and plan.tensor > 1:
+            g = lax.psum(g, "model", axis_index_groups=tpg)
+        elif gs.tp_mode == "kvshare" and kvg is not None:
+            g = lax.psum(g, "model", axis_index_groups=kvg)
+        elif gs.tp_mode == "model":
+            g = lax.psum(g, "model")
+        if has_pod:
+            g = lax.psum(g, "pod")
+        if gs.data_rs:
+            flat = g.reshape(-1)
+            c = opt["master"].shape[-1]
+            pad = plan.data * c - flat.shape[0]
+            if pad:
+                flat = jnp.pad(flat, (0, pad))
+            gsh = cc.ring_reduce_scatter(flat, "data", bidirectional=bidirectional)
+            m = opt["master"].reshape(-1)
+            st = {k: v.reshape(-1) for k, v in opt.items() if k != "master"}
+            new_m, new_st = optimizer.update(gsh, m, st, step)
+            new_p_flat = cc.ring_all_gather(
+                new_m.astype(p.dtype), "data", bidirectional=bidirectional
+            )
+            if pad:
+                new_p_flat = new_p_flat[:-pad]
+            new_p = new_p_flat.reshape(p.shape)
+            new_opt = {"master": new_m.reshape(opt["master"].shape),
+                       **{k: v.reshape(opt[k].shape) for k, v in new_st.items()}}
+        else:
+            new_m, new_st = optimizer.update(g, opt["master"],
+                                             {k: v for k, v in opt.items() if k != "master"},
+                                             step)
+            new_p = new_m.astype(p.dtype)
+            new_opt = {"master": new_m, **new_st}
+        return new_p, new_opt
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_p = jax.tree.leaves(params_loc)
+    flat_o = jax.tree.leaves(opt_loc, is_leaf=lambda x: isinstance(x, dict) and "master" in x)
+    flat_s = jax.tree.leaves(syncs)
+    outs = [one(g, p, o, s) for g, p, o, s in zip(flat_g, flat_p, flat_o, flat_s)]
+    new_params = jax.tree.unflatten(tdef, [a for a, _ in outs])
+    new_opt = jax.tree.unflatten(tdef, [b for _, b in outs])
+    return new_params, new_opt
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    plan: PipelinePlan,
+    mesh: Mesh,
+    optimizer: Optimizer,
+    shape: InputShape,
+    *,
+    bidirectional: bool = True,
+    use_pallas: bool = False,
+    donate: bool = True,
+):
+    """jit-able (params, opt_state, batch, step) -> (params, opt_state, metrics)."""
+    has_pod = "pod" in mesh.axis_names
+    param_specs = sharding.pipeline_param_specs(cfg, plan)
+    _, opt_specs = opt_state_specs(cfg, plan, optimizer)
+    b_specs = batch_pspecs(cfg, shape, plan)
+    syncs = grad_sync_tree(cfg, plan)
+    mask = sharding.layer_mask_array(cfg, plan)
+    mask_spec = P("model", None, None)
+
+    def device_fn(params, opt_state, batch, step_idx, mask_arr):
+        params_loc = {
+            k: (jax.tree.map(lambda a: a[0], v) if k == "layers" else v)
+            for k, v in params.items()
+        }
+
+        # opt leaf-dicts: data_rs -> local [1,1,c] -> [c]; EP -> [1,pp,...] -> [pp,...]
+        def unbox_opt(d, gs):
+            if gs.data_rs:
+                return {k: v.reshape(-1) for k, v in d.items()}
+            return {k: v[0] for k, v in d.items()}
+
+        opt_loc = jax.tree.map(unbox_opt, opt_state, syncs,
+                               is_leaf=lambda x: isinstance(x, dict) and "master" in x)
+        mask_loc = mask_arr[0]
+
+        def loss_of(p):
+            return pipeline_train_loss(
+                cfg, plan, p, mask_loc, batch, has_pod=has_pod, use_pallas=use_pallas
+            )
+
+        (loss, metrics), grads = jax.value_and_grad(loss_of, has_aux=True)(params_loc)
+        new_params_loc, new_opt_loc = _apply_updates(
+            cfg, plan, optimizer, grads, params_loc, opt_loc, syncs, step_idx,
+            bidirectional=bidirectional, has_pod=has_pod,
+        )
+        # re-box
+        new_params = {
+            k: (jax.tree.map(lambda a: a[None], v) if k == "layers" else v)
+            for k, v in new_params_loc.items()
+        }
+
+        def rebox_opt(new, gs):
+            if gs.data_rs:
+                return {k: v.reshape(1, 1, -1) for k, v in new.items()}
+            return {k: v[None] for k, v in new.items()}
+
+        new_opt = jax.tree.map(rebox_opt, new_opt_loc, syncs,
+                               is_leaf=lambda x: isinstance(x, dict) and "master" in x)
+        return new_params, new_opt, metrics
+
+    smapped = jax.shard_map(
+        device_fn,
+        mesh=mesh,
+        in_specs=(param_specs, opt_specs, b_specs, P(), mask_spec),
+        out_specs=(param_specs, opt_specs, P()),
+        check_vma=False,
+    )
+
+    def step(params, opt_state, batch, step_idx):
+        return smapped(params, opt_state, batch, jnp.asarray(step_idx, jnp.int32), jnp.asarray(mask))
+
+    donate_args = (0, 1) if donate else ()
+    return jax.jit(step, donate_argnums=donate_args)
+
+
+def make_train_state(cfg, plan, key, optimizer):
+    """Concrete laid-out params + opt state (single-controller path)."""
+    base = registry.init_params(cfg, key)
+    params = sharding.to_pipeline_layout(cfg, plan, base)
+    opt_state = init_opt_state(cfg, plan, optimizer, params)
+    return params, opt_state

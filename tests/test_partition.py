@@ -1,0 +1,56 @@
+"""hat/tilde operators (paper eq (4)) and layer-merging invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (
+    hat,
+    highest_layers,
+    lowest_layers,
+    merge_layers,
+    stages_of,
+    tilde,
+)
+from repro.core.profiler import paper_model_profile
+from repro.serverless.platform import AWS_LAMBDA
+
+
+@given(
+    u=st.lists(st.floats(0.0, 100.0), min_size=2, max_size=12),
+    data=st.data(),
+)
+@settings(max_examples=200, deadline=None)
+def test_hat_tilde_partition_sums(u, data):
+    L = len(u)
+    x = data.draw(st.lists(st.integers(0, 1), min_size=L - 1, max_size=L - 1))
+    u = np.array(u)
+    h = hat(u, np.array(x))
+    t = tilde(u, np.array(x))
+    for lo, hi in stages_of(x):
+        seg = u[lo:hi + 1].sum()
+        assert np.isclose(h[hi], seg)   # hat at highest layer = stage sum
+        assert np.isclose(t[lo], seg)   # tilde at lowest layer = stage sum
+    assert highest_layers(x) == [hi for _, hi in stages_of(x)]
+    assert lowest_layers(x) == [lo for lo, _ in stages_of(x)]
+
+
+@given(target=st.integers(2, 20))
+@settings(max_examples=30, deadline=None)
+def test_merge_preserves_totals(target):
+    prof = paper_model_profile("amoebanet-d36", AWS_LAMBDA)
+    merged = merge_layers(prof, target)
+    assert merged.L <= max(target, 1) + 1
+    assert np.isclose(merged.param_bytes, prof.param_bytes)
+    a0 = sum(l.act_bytes for l in prof.layers)
+    a1 = sum(l.act_bytes for l in merged.layers)
+    assert np.isclose(a0, a1)
+    for j in range(len(prof.layers[0].fwd_time)):
+        f0 = sum(l.fwd_time[j] for l in prof.layers)
+        f1 = sum(l.fwd_time[j] for l in merged.layers)
+        assert np.isclose(f0, f1)
+
+
+def test_merge_balances_compute():
+    prof = paper_model_profile("amoebanet-d36", AWS_LAMBDA)
+    merged = merge_layers(prof, 8, criterion="compute")
+    w = [np.mean(l.fwd_time) + np.mean(l.bwd_time) for l in merged.layers]
+    assert max(w) / (sum(w) / len(w)) < 3.0  # no monster super-layer

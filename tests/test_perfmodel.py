@@ -1,0 +1,85 @@
+"""Properties of the paper's performance model + validation against the
+discrete-event simulator (Table 3 analog)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner
+from repro.core.perfmodel import (
+    Config,
+    evaluate,
+    sync_time_nonpipelined,
+    sync_time_pipelined,
+)
+from repro.core.profiler import paper_model_profile
+from repro.core.partition import merge_layers
+from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.simulator import simulate_funcpipe
+
+
+# ------------------------------------------------ eq (1) vs eq (2) properties
+@given(
+    s=st.floats(1e6, 2e9),
+    w=st.floats(1e6, 1e9),
+    n=st.integers(2, 64),
+    t_lat=st.floats(0.0, 0.05),
+)
+@settings(max_examples=300, deadline=None)
+def test_pipelined_sync_beats_nonpipelined(s, w, n, t_lat):
+    """Eq (2) < eq (1) whenever transfer dominates latency: the pipelined
+    schedule saves (1 - 2/n) * s/w transfer at the price of (n - 2) * t_lat."""
+    t1 = sync_time_nonpipelined(s, w, n, t_lat)
+    t2 = sync_time_pipelined(s, w, n, t_lat)
+    saving = (1 - 2 / n) * s / w
+    extra_lat = (n - 2) * t_lat
+    if saving > extra_lat:
+        assert t2 < t1
+    assert t1 == pytest.approx(3 * s / w - 2 * s / (n * w) + 4 * t_lat)
+    assert t2 == pytest.approx(2 * s / w + (2 + n) * t_lat)
+
+
+def test_paper_numeric_example():
+    """§3.3: 280 MB model, 8 workers, 70 MB/s -> transfer 11s -> 8s (~27%)."""
+    s, w, n = 280e6, 70e6, 8
+    t1 = sync_time_nonpipelined(s, w, n, 0.0)
+    t2 = sync_time_pipelined(s, w, n, 0.0)
+    assert t1 == pytest.approx(11.0, rel=0.05)
+    assert t2 == pytest.approx(8.0, rel=0.05)
+    assert (t1 - t2) / t1 == pytest.approx(0.27, abs=0.02)
+
+
+# ------------------------------------------------------- model vs simulator
+@pytest.mark.parametrize("model", ["amoebanet-d18", "bert-large"])
+@pytest.mark.parametrize("alpha", [(1.0, 0.0), (1.0, 2**19 * 1e-9)])
+def test_perfmodel_matches_simulator(model, alpha):
+    """Analytical t_iter within ~20% of the discrete-event simulation (the
+    paper reports ~11% mean error against the real system, App. E)."""
+    prof = paper_model_profile(model, AWS_LAMBDA)
+    M = 16
+    r = planner.solve(prof, AWS_LAMBDA, alpha=alpha, total_micro_batches=M, merge_to=8)
+    assert r is not None
+    sim = simulate_funcpipe(r.profile, AWS_LAMBDA, r.config, M)
+    err = abs(sim.t_iter - r.evaluation.t_iter) / sim.t_iter
+    assert err < 0.25, (sim.t_iter, r.evaluation.t_iter)
+
+
+def test_bandwidth_monotonicity():
+    """More memory (=> more bandwidth/CPU) never slows an identical plan."""
+    prof = merge_layers(paper_model_profile("amoebanet-d18", AWS_LAMBDA), 6)
+    L = prof.L
+    x = tuple(1 if i == L // 2 else 0 for i in range(L - 1))
+    prev = None
+    for j in range(len(AWS_LAMBDA.memory_options)):
+        cfg = Config(x=x, d=4, z=tuple([j] * L))
+        ev = evaluate(prof, AWS_LAMBDA, cfg, 16)
+        if prev is not None:
+            assert ev.t_iter <= prev + 1e-9
+        prev = ev.t_iter
+
+
+def test_memory_constraint_enforced():
+    prof = merge_layers(paper_model_profile("amoebanet-d36", AWS_LAMBDA), 6)
+    L = prof.L
+    cfg = Config(x=tuple([0] * (L - 1)), d=1, z=tuple([0] * L))  # all on 512MB
+    ev = evaluate(prof, AWS_LAMBDA, cfg, 16)
+    assert not ev.mem_ok  # a 900MB model can't fit a 512MB worker

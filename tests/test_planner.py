@@ -1,0 +1,94 @@
+"""Co-optimizer correctness: heuristic vs exhaustive, feasibility, and
+dominance over the baseline algorithms on the paper's models."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import planner
+from repro.core.partition import LayerProfile, ModelProfile, stages_of
+from repro.core.profiler import paper_model_profile
+from repro.serverless.platform import AWS_LAMBDA, MB
+
+
+def random_profile(rng, L=5, J=3):
+    layers = []
+    for i in range(L):
+        fwd = tuple(float(rng.uniform(0.05, 2.0) / (j + 1)) for j in range(J))
+        layers.append(LayerProfile(
+            name=f"l{i}",
+            param_bytes=float(rng.uniform(5, 200)) * MB,
+            act_bytes=float(rng.uniform(5, 150)) * MB,
+            out_bytes=float(rng.uniform(1, 50)) * MB,
+            grad_out_bytes=float(rng.uniform(1, 50)) * MB,
+            fwd_time=fwd,
+            bwd_time=tuple(2 * t for t in fwd),
+        ))
+    return ModelProfile(name="rand", layers=tuple(layers))
+
+
+import dataclasses
+
+SMALL = dataclasses.replace(
+    AWS_LAMBDA,
+    memory_options=AWS_LAMBDA.memory_options[3:6],  # J=3 for exhaustive
+)
+
+
+@given(seed=st.integers(0, 50))
+@settings(max_examples=12, deadline=None)
+def test_cd_matches_exhaustive_small(seed):
+    """Coordinate descent finds the exhaustive optimum on small instances."""
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, L=4, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=4)
+    a = planner.solve(prof, SMALL, method="cd", **kw)
+    b = planner.solve(prof, SMALL, method="exhaustive", **kw)
+    if a is None or b is None:
+        assert a is None and b is None
+        return
+    assert a.objective <= b.objective * 1.02 + 1e-12
+
+
+@pytest.mark.parametrize("model", ["resnet101", "amoebanet-d18", "bert-large"])
+def test_plans_feasible_and_consistent(model):
+    prof = paper_model_profile(model, AWS_LAMBDA)
+    r = planner.solve(prof, AWS_LAMBDA, alpha=(1.0, 1e-4), total_micro_batches=16,
+                      merge_to=8)
+    assert r is not None
+    assert r.evaluation.mem_ok
+    L = r.profile.L
+    assert len(r.config.x) == L - 1
+    assert len(r.config.z) == L
+    # memory constant within each stage (constraint 3c)
+    for lo, hi in stages_of(r.config.x):
+        assert len({r.config.z[i] for i in range(lo, hi + 1)}) == 1
+    assert 16 % r.config.d == 0
+
+
+@pytest.mark.parametrize("model", ["amoebanet-d36", "bert-large"])
+def test_coopt_beats_baselines(model):
+    """§5.6: the co-optimizer's objective is at least as good as TPDMP-style
+    (throughput-only) and Bayes-style (random search) on the same model."""
+    prof = paper_model_profile(model, AWS_LAMBDA)
+    kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=16, merge_to=8)
+    ours = planner.solve(prof, AWS_LAMBDA, **kw)
+    tpdmp = planner.tpdmp_solve(prof, AWS_LAMBDA, **kw)
+    bayes = planner.bayes_solve(prof, AWS_LAMBDA, rounds=100, seed=0, **kw)
+    assert ours is not None
+    for other in (tpdmp, bayes):
+        if other is not None:
+            assert ours.objective <= other.objective * 1.001
+
+
+def test_recommendation_rule():
+    prof = paper_model_profile("amoebanet-d18", AWS_LAMBDA)
+    results = [
+        planner.solve(prof, AWS_LAMBDA, alpha=a, total_micro_batches=16, merge_to=8)
+        for a in [(1.0, 0.0), (1.0, 2**19 * 1e-9), (1.0, 2**22 * 1e-9)]
+    ]
+    results = [r for r in results if r is not None]
+    rec = planner.recommend(results)
+    mc = min(results, key=lambda r: r.evaluation.c_iter)
+    # recommended is never slower than the min-cost config
+    assert rec.evaluation.t_iter <= mc.evaluation.t_iter + 1e-9

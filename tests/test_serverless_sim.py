@@ -1,0 +1,78 @@
+"""Simulator behaviour + the paper's §5 claims reproduced in simulation."""
+import numpy as np
+import pytest
+
+from repro.core import planner
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import funcpipe, hybrid_ps, lambda_ml
+from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA
+from repro.serverless.simulator import simulate_data_parallel, simulate_funcpipe
+
+
+def test_pipelined_sync_improves_dp_training():
+    """Fig 8: pipelined scatter-reduce improves DP iteration time, more with
+    higher DP degree (2-18% iteration, 6-26% sync in the paper)."""
+    prof = paper_model_profile("amoebanet-d18", AWS_LAMBDA)
+    gains = []
+    for n in [2, 4, 8, 16, 32]:
+        a = simulate_data_parallel(prof, AWS_LAMBDA, n_workers=n, mem_index=7,
+                                   samples_per_worker=4, micro_batch=4,
+                                   sync="scatter_reduce")
+        b = simulate_data_parallel(prof, AWS_LAMBDA, n_workers=n, mem_index=7,
+                                   samples_per_worker=4, micro_batch=4,
+                                   sync="pipelined")
+        gains.append(1 - b.breakdown["sync"] / a.breakdown["sync"])
+        # at n=2 eq(1)==eq(2) exactly (3s/w - s/w == 2s/w); strictly better after
+        assert b.t_iter <= a.t_iter * (1 + 1e-9)
+        if n > 2:
+            assert b.t_iter < a.t_iter
+    assert gains[-1] > gains[0]          # growing with DP degree
+    assert 0.05 < gains[-1] < 0.35       # paper: 6-26% (bound 33%)
+
+
+@pytest.mark.parametrize("model,gb", [("amoebanet-d36", 64), ("bert-large", 64),
+                                      ("amoebanet-d36", 256)])
+def test_funcpipe_beats_lambdaml_at_scale(model, gb):
+    """Fig 5: 1.3-2.2x speedup and cost reduction vs LambdaML for the larger
+    models and batches."""
+    prof = paper_model_profile(model, AWS_LAMBDA)
+    lm = lambda_ml(prof, AWS_LAMBDA, gb)
+    fp = funcpipe(prof, AWS_LAMBDA, gb)
+    rec = fp.recommended_sim
+    speedup = lm.t_iter / rec.t_iter
+    assert speedup > 1.25, speedup
+    best_cost = min(s.cost for s in fp.sims)
+    assert best_cost < lm.cost  # some Pareto point is cheaper
+
+
+def test_small_model_small_gain():
+    """Fig 5/6b: small models see small or no improvement."""
+    prof = paper_model_profile("resnet101", AWS_LAMBDA)
+    lm = lambda_ml(prof, AWS_LAMBDA, 16)
+    fp = funcpipe(prof, AWS_LAMBDA, 16)
+    rec = fp.recommended_sim
+    assert rec.t_iter < lm.t_iter * 1.3  # comparable
+    assert min(s.cost for s in fp.sims) < lm.cost * 1.5
+
+
+def test_hybrid_ps_bottlenecks_at_scale():
+    """§5.2: the central PS saturates as workers grow."""
+    prof = paper_model_profile("amoebanet-d36", AWS_LAMBDA)
+    hp_small = lambda_ml(prof, AWS_LAMBDA, 16, ps=True)
+    hp_large = lambda_ml(prof, AWS_LAMBDA, 512, ps=True)
+    lm_large = lambda_ml(prof, AWS_LAMBDA, 512)
+    assert hp_large.t_iter > lm_large.t_iter  # decentralized wins at scale
+
+
+def test_alibaba_storage_cap():
+    """§5.7: Alibaba's 10Gb/s OSS cap exists in the platform model."""
+    assert ALIBABA_FC.storage_total_bandwidth is not None
+    assert AWS_LAMBDA.storage_total_bandwidth is None
+
+
+def test_grad_accum_cheaper_but_slower():
+    prof = paper_model_profile("amoebanet-d18", AWS_LAMBDA)
+    base = lambda_ml(prof, AWS_LAMBDA, 64)
+    ga = lambda_ml(prof, AWS_LAMBDA, 64, grad_accum=True)
+    assert ga.t_iter >= base.t_iter * 0.99
+    assert ga.total_mem_gb <= base.total_mem_gb

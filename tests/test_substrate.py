@@ -1,0 +1,117 @@
+"""Checkpoint round-trip, data-pipeline determinism, roofline HLO parsing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import FunctionManager, restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.configs.base import InputShape
+from repro.data.synthetic import make_batch
+from repro.launch import roofline as rl
+from repro.models import registry
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    params = registry.init_params(cfg, jax.random.PRNGKey(0))
+    path = str(tmp_path / "ckpt.msgpack")
+    save_checkpoint(path, params, step=7)
+    like = jax.tree.map(lambda a: jnp.zeros_like(a), params)
+    restored, step = restore_checkpoint(path, like)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_function_manager(tmp_path):
+    fm = FunctionManager(str(tmp_path / "c.msgpack"), lifetime=0.0)
+    assert fm.should_checkpoint()
+    fm.checkpoint_and_restart({"w": jnp.ones(3)}, step=1)
+    assert fm.restarts == 1
+    assert os.path.exists(fm.path)
+
+
+def test_data_determinism_and_sharding():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    shape = InputShape("t", 32, 8, "train")
+    a = make_batch(cfg, shape, seed=1, step=3, shard=0, n_shards=2)
+    b = make_batch(cfg, shape, seed=1, step=3, shard=0, n_shards=2)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = make_batch(cfg, shape, seed=1, step=3, shard=1, n_shards=2)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+    d = make_batch(cfg, shape, seed=1, step=4, shard=0, n_shards=2)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(d["tokens"]))
+    assert a["tokens"].shape == (4, 32)
+
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[64,8])) -> (s32[], f32[64,8]) {
+  %ag.1 = f32[128,8] all-gather(f32[64,8] %p), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %cp.1 = f32[64,8] collective-permute(f32[64,8] %p), source_target_pairs={{0,1},{1,2}}
+}
+
+%cond.1 (arg: (s32[], f32[64,8])) -> pred[] {
+  %c = s32[] constant(5)
+  %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main (p0: f32[64,8]) -> f32[64,8] {
+  %w = (s32[], f32[64,8]) while((s32[], f32[64,8]) %init), condition=%cond.1, body=%body.1
+  %ar.2 = f32[32,4] all-reduce(f32[32,4] %x), replica_groups={{0,1,2,3}}, to_apply=%add
+  %rs.1 = f32[16,8] reduce-scatter(f32[64,8] %y), replica_groups=[2,4]<=[8], dimensions={0}
+}
+"""
+
+
+def test_parse_collectives_kinds_and_groups():
+    ops = rl.parse_collectives(HLO_SAMPLE, trip_weighted=False)
+    kinds = sorted(o.kind for o in ops)
+    assert kinds == ["all-gather", "all-reduce", "collective-permute", "reduce-scatter"]
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.group_size == 2
+    assert ag.result_bytes == 128 * 8 * 4
+    rs = next(o for o in ops if o.kind == "reduce-scatter")
+    assert rs.group_size == 4  # iota form [2,4]
+
+
+def test_trip_multipliers():
+    mult = rl.computation_multipliers(HLO_SAMPLE)
+    assert mult.get("body.1", 0) == 5.0
+    ops = rl.parse_collectives(HLO_SAMPLE, trip_weighted=True)
+    ag = next(o for o in ops if o.kind == "all-gather")
+    assert ag.trip_mult == 5.0
+    ar = next(o for o in ops if o.kind == "all-reduce")
+    assert ar.trip_mult == 1.0
+
+
+def test_link_bytes_semantics():
+    op = rl.CollectiveOp("all-gather", 1024, 4)
+    assert op.link_bytes == 1024 * 3 / 4
+    op = rl.CollectiveOp("all-reduce", 1024, 4)
+    assert op.link_bytes == 2 * 1024 * 3 / 4
+    op = rl.CollectiveOp("collective-permute", 1024, 1)
+    assert op.link_bytes == 1024
+    op = rl.CollectiveOp("reduce-scatter", 256, 4)  # result = shard
+    assert op.link_bytes == 256 * 3
+
+
+def test_analytic_roofline_shapes():
+    from repro.core.plan import make_plan
+    from repro.configs import INPUT_SHAPES
+    cfg = get_config("phi3-mini-3.8b")
+    for sname in ["train_4k", "prefill_32k", "decode_32k"]:
+        shape = INPUT_SHAPES[sname]
+        plan = make_plan(cfg, shape)
+        r = rl.analytic_roofline(cfg, shape, plan)
+        assert r.flops > 0 and r.hbm_bytes > 0
+        assert r.bottleneck in ("compute", "memory", "collective")
+    # decode should be memory-bound (KV cache streaming)
+    shape = INPUT_SHAPES["decode_32k"]
+    plan = make_plan(cfg, shape)
+    r = rl.analytic_roofline(cfg, shape, plan)
+    assert r.bottleneck == "memory"
