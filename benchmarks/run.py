@@ -29,6 +29,9 @@ def _headline(name: str, rows: list) -> str:
     if name == "perfmodel_accuracy":
         avg = [x for x in rows if x["model"] == "AVERAGE"]
         return f"mean_err={avg[0]['mean_err']}" if avg else "n/a"
+    if name == "runtime_accuracy":
+        mx = [x for x in rows if x["model"] == "MAX"]
+        return f"max_sim_err={mx[0]['sim_rel_err']}" if mx else "n/a"
     if name == "roofline":
         ok = [x for x in rows if x.get("status") == "ok"]
         skip = [x for x in rows if x.get("status") == "skip"]
@@ -50,6 +53,7 @@ def main() -> None:
         overall_perf,
         perfmodel_accuracy,
         roofline_bench,
+        runtime_accuracy,
         scaling,
         scatter_reduce_bench,
     )
@@ -62,6 +66,7 @@ def main() -> None:
         ("bandwidth_scaling", bandwidth_scaling),     # Fig 11
         ("alibaba", alibaba_bench),                   # Fig 10 / §5.7
         ("perfmodel_accuracy", perfmodel_accuracy),   # Table 3
+        ("runtime_accuracy", runtime_accuracy),       # engine vs sim vs model
         ("roofline", roofline_bench),                 # deliverable (g)
         ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
     ]

@@ -1,0 +1,92 @@
+"""Three-level accuracy: storage-backed engine vs analytic simulator vs
+closed-form performance model, across models and both platforms (§5.1).
+
+For each (model, platform) the planner picks a configuration; the engine then
+*executes* it through the emulated object store (timing axis only — sizes and
+clocks, no JAX) and we report the relative iteration-time disagreement of
+each analytic level against the executed ground truth.
+
+    PYTHONPATH=src python -m benchmarks.runtime_accuracy [--fast]
+"""
+from __future__ import annotations
+
+import sys
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import planner
+from repro.core.profiler import arch_model_profile, paper_model_profile
+from repro.serverless.frameworks import ALPHA_PAIRS
+from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA
+from repro.serverless.runtime import run_plan
+from repro.serverless.simulator import simulate_funcpipe
+
+MODELS = ["bert-large", "gemma3-4b", "phi3-mini-3.8b"]
+PLATFORMS = [AWS_LAMBDA, ALIBABA_FC]
+
+
+def _profile(model, platform):
+    if model in ("bert-large", "resnet101", "amoebanet-d18", "amoebanet-d36"):
+        return paper_model_profile(model, platform)
+    return arch_model_profile(get_config(model), platform)
+
+
+def rows(fast: bool = False):
+    out = []
+    models = MODELS[:2] if fast else MODELS
+    platforms = PLATFORMS[:1] if fast else PLATFORMS
+    batches = [64] if fast else [16, 64]
+    max_eng = 0.0
+    for model in models:
+        for platform in platforms:
+            prof = _profile(model, platform)
+            for gb in batches:
+                M = gb // 4
+                # planner's pick, plus a forced data-parallel plan (d>1
+                # exercises the emulated scatter-reduce against eq (2))
+                solves = [("planned", dict())]
+                if M >= 4:
+                    solves.append(("d4", dict(d_options=(4,))))
+                for tag, kw in solves:
+                    r = planner.solve(prof, platform, alpha=ALPHA_PAIRS[1],
+                                      total_micro_batches=M, merge_to=8, **kw)
+                    if r is None:
+                        out.append({"bench": "runtime_accuracy", "model": model,
+                                    "platform": platform.name, "gb": gb,
+                                    "plan": tag, "status": "infeasible"})
+                        continue
+                    sim = simulate_funcpipe(r.profile, platform, r.config, M)
+                    eng = run_plan(r.profile, platform, r.config, M, steps=2)
+                    err_model = abs(r.evaluation.t_iter - eng.t_iter) / eng.t_iter
+                    err_sim = abs(sim.t_iter - eng.t_iter) / eng.t_iter
+                    max_eng = max(max_eng, err_sim)
+                    out.append({
+                        "bench": "runtime_accuracy", "model": model,
+                        "platform": platform.name, "gb": gb, "plan": tag,
+                        "stages": sum(r.config.x) + 1, "d": r.config.d,
+                        "t_engine": round(eng.t_iter, 3),
+                        "t_sim": round(sim.t_iter, 3),
+                        "t_model": round(r.evaluation.t_iter, 3),
+                        "sim_rel_err": round(err_sim, 4),
+                        "model_rel_err": round(err_model, 4),
+                    })
+    out.append({"bench": "runtime_accuracy", "model": "MAX",
+                "platform": "-", "gb": "-",
+                "sim_rel_err": round(max_eng, 4),
+                "model_rel_err": round(max(
+                    r.get("model_rel_err", 0.0) for r in out), 4)})
+    return out
+
+
+def main(fast: bool = False):
+    rs = rows(fast)
+    for r in rs:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    mx = rs[-1]
+    print(f"\nmax relative error vs executed engine: "
+          f"simulator={mx['sim_rel_err']:.2%} perfmodel={mx['model_rel_err']:.2%}")
+
+
+if __name__ == "__main__":
+    main("--fast" in sys.argv)

@@ -42,6 +42,10 @@ def main():
         print(f"alpha2={alpha[1]:.2e}: stages={len(st)} d={r.config.d} "
               f"mem={mems}MB t_iter={sim.t_iter:.2f}s cost=${sim.cost:.5f} "
               f"(model predicts {r.evaluation.t_iter:.2f}s; solve {r.solve_seconds:.1f}s)")
+    if not results:
+        print("no feasible FuncPipe config for this model/batch on this "
+              "platform (try a smaller batch or the alibaba platform)")
+        return
     rec = planner.recommend(results)
     print(f"\nRECOMMENDED: d={rec.config.d}, {sum(rec.config.x)+1} stages, "
           f"t={rec.evaluation.t_iter:.2f}s, ${rec.evaluation.c_iter:.5f}/iter")

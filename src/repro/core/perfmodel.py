@@ -5,6 +5,12 @@ memory m_i) and a layer profile, computes the iteration time eq (7) and cost
 eq (6), the memory constraint eq (3b), and the synchronization times for both
 scatter-reduce algorithms — eq (1) (LambdaML, non-pipelined) and eq (2)
 (FuncPipe, pipelined).
+
+Validation ladder: these closed forms are checked against the independent
+longest-path DP in ``repro.serverless.simulator``, and both against the
+*executable* ground truth — ``repro.serverless.runtime``, which runs the
+schedule through an emulated object store (with real JAX numerics when an
+``Execution`` is attached).  See ``benchmarks/runtime_accuracy.py``.
 """
 from __future__ import annotations
 

@@ -89,7 +89,9 @@ def arch_model_profile(cfg: ArchConfig, platform: Platform, *, seq: int = 512,
     emb_b = cfg.vocab_size * d * F32
     layers.append(_layer(platform, "embed", emb_b, out_b, out_b, out_b,
                          2 * seq * d * micro_batch))
-    per_layer_params = (cfg.param_count() - (1 if cfg.tie_embeddings else 2) * emb_b / F32 * F32) / cfg.n_layers
+    n_emb_tables = 1 if cfg.tie_embeddings else 2
+    per_layer_params = max(
+        0.0, cfg.param_count() * F32 - n_emb_tables * emb_b) / cfg.n_layers
     for i in range(cfg.n_layers):
         spec = cfg.layer_spec(i)
         p_b = per_layer_params

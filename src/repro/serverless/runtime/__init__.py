@@ -1,0 +1,24 @@
+"""Storage-backed serverless execution engine (the executable ground truth
+for the analytic stack: perfmodel eq (7) -> simulator DP -> this runtime).
+
+    store          emulated object store + per-worker virtual clocks
+    scatter_reduce storage collectives: pipelined eq (2) vs 3-phase eq (1)
+    worker         stage workers running real JAX for their layer range
+    engine         GPipe orchestration of a planner Config for K steps
+"""
+from repro.serverless.runtime.engine import EngineResult, Execution, run_plan  # noqa: F401
+from repro.serverless.runtime.scatter_reduce import (  # noqa: F401
+    pipelined_scatter_reduce,
+    three_phase_scatter_reduce,
+)
+from repro.serverless.runtime.store import (  # noqa: F401
+    ObjectStore,
+    StageChannel,
+    effective_bandwidth,
+)
+from repro.serverless.runtime.worker import (  # noqa: F401
+    StageSpan,
+    StageWorker,
+    assemble_params,
+    stage_instance_ranges,
+)

@@ -1,0 +1,232 @@
+"""Orchestrator: run a FuncPipe plan end-to-end through the emulated store.
+
+Takes a profiled model + platform + planner configuration and executes the
+GPipe schedule of Fig 3 for K steps on an ``S x d`` grid of emulated
+serverless workers: per replica, all micro-batch forwards flow downstream
+through activation keys, the reversed backwards flow gradient keys upstream,
+then each stage's ``d`` replicas synchronize with a storage scatter-reduce
+(pipelined eq (2) or the 3-phase eq (1) baseline).  Every byte moves through
+:class:`ObjectStore`; every task charges the virtual clock with the same
+per-stage costs the analytic simulator uses (``simulator.stage_aggregates``),
+so the engine's simulated iteration time independently validates
+``simulate_funcpipe`` — and, with an :class:`Execution` attached, the
+workers run *real JAX* for their layers, validating the plan's numerics
+against the monolithic training path.
+
+Two axes of use:
+
+  * timing-only (``execution=None``): objects carry sizes, not values; used
+    by ``benchmarks/runtime_accuracy.py`` for the three-level accuracy table.
+  * numeric (``execution=Execution(...)``): K full training steps; final
+    params match a monolithic fp32 loop within summation-order noise.
+
+Not charged (matching the simulator): input-batch fetches (the shared-
+nothing synthetic loader regenerates shards in-function, ``data.synthetic``),
+the optimizer update FLOPs, and function cold-starts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.partition import ModelProfile
+from repro.core.perfmodel import Config
+from repro.serverless.platform import GB, Platform
+from repro.serverless.runtime.scatter_reduce import (
+    pipelined_scatter_reduce,
+    three_phase_scatter_reduce,
+)
+from repro.serverless.runtime.store import ObjectStore, StageChannel, StoreStats
+from repro.serverless.simulator import stage_aggregates
+
+
+@dataclass(frozen=True)
+class Execution:
+    """Numeric-execution attachment: which arch to actually run."""
+
+    cfg: Any                                  # ArchConfig
+    optimizer: Any                            # repro.optim.Optimizer
+    init_params: dict                         # registry.init_params layout
+    batch_fn: Callable[[int], dict]           # step -> global batch (leaves [B, ...])
+
+
+@dataclass(frozen=True)
+class EngineResult:
+    t_iter: float                 # simulated seconds per training iteration
+    t_total: float                # simulated seconds for all steps
+    steps: int
+    cost: float                   # $ per iteration (GB-s pricing, all workers)
+    n_workers: int
+    total_mem_gb: float
+    breakdown: Dict[str, float] = field(default_factory=dict)
+    metrics: List[Dict[str, float]] = field(default_factory=list)  # per step
+    params: Optional[dict] = None          # final assembled params (numeric mode)
+    store_stats: Optional[StoreStats] = None
+
+    @property
+    def losses(self) -> List[float]:
+        return [m["loss"] for m in self.metrics]
+
+
+def _split_batch(batch: dict, r: int, d: int, m: int, mu: int):
+    """Micro-batch m of replica r from the global batch (row-contiguous)."""
+    import jax
+
+    def sl(a):
+        B = a.shape[0]
+        assert B % (d * mu) == 0, (B, d, mu)
+        per_r = B // d
+        mb = per_r // mu
+        lo = r * per_r + m * mb
+        return a[lo:lo + mb]
+
+    return jax.tree.map(sl, batch)
+
+
+def run_plan(
+    profile: ModelProfile,
+    platform: Platform,
+    config: Config,
+    total_micro_batches: int,
+    *,
+    steps: int = 1,
+    pipelined_sync: bool = True,
+    contention: bool = False,
+    execution: Optional[Execution] = None,
+) -> EngineResult:
+    """Execute ``steps`` training iterations of the plan through the store."""
+    agg = stage_aggregates(profile, platform, config, total_micro_batches,
+                           contention=contention)
+    S, mu, d = agg.S, agg.mu, agg.d
+    store = ObjectStore(latency=agg.t_lat)
+    channels = [[StageChannel(store, agg.w[s], agg.t_lat, name=f"s{s}r{r}")
+                 for r in range(d)] for s in range(S)]
+    sync_fn = pipelined_scatter_reduce if pipelined_sync else three_phase_scatter_reduce
+
+    workers = None
+    if execution is not None:
+        from repro.serverless.runtime.worker import StageWorker, stage_instance_ranges
+
+        spans = stage_instance_ranges(execution.cfg, config.x)
+        assert len(spans) == S
+        workers = [[StageWorker(execution.cfg, spans[s], execution.init_params,
+                                mu=mu, optimizer=execution.optimizer)
+                    for r in range(d)] for s in range(S)]
+
+    metrics: List[Dict[str, float]] = []
+    iter_ends: List[float] = []
+    sync_durations: List[float] = []
+
+    for k in range(steps):
+        batch = execution.batch_fn(k) if execution is not None else None
+        ce_sum = 0.0
+        aux_sum = 0.0
+
+        # ---------------------------------------------------------- forward
+        for r in range(d):
+            for m in range(mu):
+                for s in range(S):
+                    ch = channels[s][r]
+                    x_val = None
+                    if s > 0:
+                        key = f"k{k}/r{r}/m{m}/act{s - 1}"
+                        x_val, _ = ch.download(key)
+                        store.delete(key)
+                    t_ready = ch.cpu_free if s == 0 else ch.dn_free
+                    ch.compute(agg.t_fc[s], ready=t_ready)
+                    out = None
+                    if workers is not None:
+                        batch_mb = _split_batch(batch, r, d, m, mu)
+                        out, aux = workers[s][r].forward(m, x_val, batch_mb)
+                        aux_sum += aux / (mu * d)
+                        if s == S - 1:
+                            ce_sum += float(out) / (mu * d)
+                    if s < S - 1:
+                        ch.upload(f"k{k}/r{r}/m{m}/act{s}", agg.out_b[s],
+                                  ready=ch.cpu_free, value=out)
+
+        # program order: backward downloads wait for forward uploads
+        for row in channels:
+            for ch in row:
+                ch.join_uplink_into_downlink()
+
+        # --------------------------------------------------------- backward
+        for r in range(d):
+            for m in range(mu - 1, -1, -1):
+                for s in range(S - 1, -1, -1):
+                    ch = channels[s][r]
+                    g_in_val = None
+                    if s < S - 1:
+                        key = f"k{k}/r{r}/m{m}/grad{s}"
+                        g_in_val, _ = ch.download(key)
+                        store.delete(key)
+                    t_ready = ch.cpu_free if s == S - 1 else ch.dn_free
+                    ch.compute(agg.t_bc[s], ready=t_ready)
+                    g_out = None
+                    if workers is not None:
+                        g_out = workers[s][r].backward(m, g_in_val)
+                    if s > 0:
+                        ch.upload(f"k{k}/r{r}/m{m}/grad{s - 1}",
+                                  agg.grad_b[s], ready=ch.cpu_free, value=g_out)
+
+        # ------------------------------------------------------------- sync
+        step_end = 0.0
+        step_sync = 0.0
+        for s in range(S):
+            row = channels[s]
+            done = [row[r].cpu_free if s == 0 else max(row[r].cpu_free, row[r].up_free)
+                    for r in range(d)]
+            values = None
+            if workers is not None:
+                values = [workers[s][r].grad_vector() for r in range(d)]
+            if d > 1:
+                reduced, ends = sync_fn(
+                    store, row, agg.s_stage[s], done, values=values,
+                    key_prefix=f"k{k}/sync{s}")
+            else:
+                reduced, ends = (values[0] if values is not None else None), done
+            if workers is not None:
+                avg = reduced / d
+                for r in range(d):
+                    workers[s][r].apply_update(avg, step=k)
+            stage_end = max(ends)
+            step_sync = max(step_sync, stage_end - max(done))
+            step_end = max(step_end, stage_end)
+            for r in range(d):
+                row[r].release_at(ends[r])
+
+        if workers is not None:
+            metrics.append({"ce": ce_sum, "aux": aux_sum,
+                            "loss": ce_sum + aux_sum})
+        iter_ends.append(step_end)
+        sync_durations.append(step_sync)
+
+    t_total = iter_ends[-1]
+    t_iter = t_total / steps
+    mem_total = d * float(agg.mem.sum())
+    cost = platform.price_per_gb_s * (mem_total / GB) * t_iter
+    comp = float(agg.t_fc.sum() + agg.t_bc.sum())
+    sync_t = float(np.mean(sync_durations))
+    params = None
+    if workers is not None:
+        from repro.serverless.runtime.worker import assemble_params
+
+        params = assemble_params(execution.cfg, [workers[s][0] for s in range(S)])
+    return EngineResult(
+        t_iter=float(t_iter),
+        t_total=float(t_total),
+        steps=steps,
+        cost=float(cost),
+        n_workers=agg.n_workers,
+        total_mem_gb=mem_total / GB,
+        breakdown={
+            "compute": comp,
+            "pipeline_comm": float(max(0.0, t_iter - comp - sync_t)) if S > 1 else 0.0,
+            "sync": sync_t,
+        },
+        metrics=metrics,
+        params=params,
+        store_stats=store.stats,
+    )

@@ -1,0 +1,160 @@
+"""Emulated cloud object store with a virtual clock (the runtime's S3/OSS).
+
+The paper's workers exchange *everything* — activations, boundary gradients,
+scatter-reduce chunks — through cloud storage.  This module emulates that
+storage for the execution engine: objects live under named keys and carry a
+``visible_at`` timestamp on the virtual clock; each serverless worker owns a
+``StageChannel`` with three serial resources (CPU, uplink, downlink) whose
+free-times advance as tasks are charged.
+
+Cost model (identical to ``repro.serverless.simulator``):
+
+  * a transfer occupies the initiating link for ``nbytes / bandwidth`` plus
+    one storage round-trip ``t_lat``.  Requests that continue a pipelined
+    HTTP stream on the same link (``new_request=False``, used by the
+    scatter-reduce for back-to-back chunk puts/gets of locally available
+    data) skip the repeated round-trip — this is what makes the emulated
+    3-phase collective land exactly on eq (1);
+  * a download can start only once the object is visible
+    (``visible_at`` = the producer's upload completion);
+  * per-worker bandwidth follows ``Platform.bandwidth(mem)`` degraded by the
+    §5.4 co-location contention model and capped by the §5.7 storage-side
+    total bandwidth (``effective_bandwidth`` below reuses the simulator's
+    functions so the two never drift).
+
+Virtual time is fully decoupled from wall time: numerics (real JAX arrays
+stored under the keys) run as fast as the host allows while the clock charges
+what AWS Lambda / Alibaba FC + S3 / OSS would have.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+# single source of truth for per-worker bandwidth (§5.4 + §5.7), re-exported
+# here as part of the runtime's public surface
+from repro.serverless.simulator import effective_bandwidth  # noqa: F401
+
+
+@dataclass
+class StoredObject:
+    nbytes: float
+    visible_at: float
+    value: Any = None
+
+
+@dataclass
+class StoreStats:
+    puts: int = 0
+    gets: int = 0
+    deletes: int = 0
+    bytes_in: float = 0.0
+    bytes_out: float = 0.0
+    peak_bytes: float = 0.0
+
+
+class ObjectStore:
+    """Flat key -> object namespace (one bucket)."""
+
+    def __init__(self, latency: float = 0.0):
+        self.latency = latency
+        self._objects: Dict[str, StoredObject] = {}
+        self._live_bytes = 0.0
+        self.stats = StoreStats()
+
+    def put(self, key: str, nbytes: float, value: Any = None,
+            visible_at: float = 0.0) -> StoredObject:
+        if key in self._objects:
+            self._live_bytes -= self._objects[key].nbytes
+        obj = StoredObject(nbytes=float(nbytes), visible_at=visible_at, value=value)
+        self._objects[key] = obj
+        self._live_bytes += obj.nbytes
+        self.stats.puts += 1
+        self.stats.bytes_in += obj.nbytes
+        self.stats.peak_bytes = max(self.stats.peak_bytes, self._live_bytes)
+        return obj
+
+    def head(self, key: str) -> StoredObject:
+        if key not in self._objects:
+            raise KeyError(f"object {key!r} was never uploaded")
+        return self._objects[key]
+
+    def get(self, key: str) -> StoredObject:
+        obj = self.head(key)
+        self.stats.gets += 1
+        self.stats.bytes_out += obj.nbytes
+        return obj
+
+    def delete(self, key: str) -> None:
+        obj = self._objects.pop(key, None)
+        if obj is not None:
+            self._live_bytes -= obj.nbytes
+            self.stats.deletes += 1
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._objects
+
+    def __len__(self) -> int:
+        return len(self._objects)
+
+    @property
+    def live_bytes(self) -> float:
+        return self._live_bytes
+
+
+class StageChannel:
+    """A worker's virtual clock: serial CPU, uplink and downlink resources.
+
+    Mirrors the resource model of ``simulator.simulate_funcpipe``: each
+    resource processes its tasks in issue order; a task starts at
+    ``max(data-ready, resource-free)``.
+    """
+
+    def __init__(self, store: ObjectStore, bandwidth: float, latency: float,
+                 name: str = "worker"):
+        assert bandwidth > 0, bandwidth
+        self.store = store
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.name = name
+        self.cpu_free = 0.0
+        self.up_free = 0.0
+        self.dn_free = 0.0
+
+    # ------------------------------------------------------------- resources
+    def compute(self, duration: float, ready: float = 0.0) -> float:
+        start = max(ready, self.cpu_free)
+        self.cpu_free = start + duration
+        return self.cpu_free
+
+    def upload(self, key: str, nbytes: float, ready: float = 0.0,
+               value: Any = None, new_request: bool = True) -> float:
+        start = max(ready, self.up_free)
+        end = start + nbytes / self.bandwidth + (self.latency if new_request else 0.0)
+        self.up_free = end
+        self.store.put(key, nbytes, value=value, visible_at=end)
+        return end
+
+    def download(self, key: str, ready: float = 0.0, new_request: bool = True):
+        obj = self.store.get(key)
+        start = max(ready, self.dn_free, obj.visible_at)
+        end = start + obj.nbytes / self.bandwidth + (self.latency if new_request else 0.0)
+        self.dn_free = end
+        return obj.value, end
+
+    # --------------------------------------------------------------- ordering
+    def join_uplink_into_downlink(self) -> None:
+        """Program-order barrier between the forward and backward phases: a
+        worker issues no backward download before its forward uploads are
+        done (the ``fwd_u_end[s, mu-1]`` term of the simulator's DP)."""
+        self.dn_free = max(self.dn_free, self.up_free)
+
+    def release_at(self, t: float) -> None:
+        """Advance every resource to at least ``t`` (post-sync barrier)."""
+        self.cpu_free = max(self.cpu_free, t)
+        self.up_free = max(self.up_free, t)
+        self.dn_free = max(self.dn_free, t)
+
+    @property
+    def now(self) -> float:
+        return max(self.cpu_free, self.up_free, self.dn_free)

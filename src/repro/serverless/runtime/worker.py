@@ -1,0 +1,262 @@
+"""Serverless stage workers: real JAX forward/backward for a layer range.
+
+A :class:`StageWorker` owns the contiguous slice of the model that the
+planner assigned to one pipeline stage — a range of period instances plus,
+for the boundary stages, the embedding table / final norm + LM head — and
+executes the same math as the monolithic ``registry.loss_fn`` /
+``core.pipeline.pipeline_train_loss`` paths: ``embed_inputs`` ->
+``period_forward`` scan -> ``rms_norm`` + CE.  Because the instance scan is
+simply split at stage boundaries, the engine's pipelined execution is
+numerically the monolithic forward, up to fp32 summation order.
+
+Partition bridge: the planner's boundary vector ``x`` indexes the arch
+profile produced by ``core.profiler.arch_model_profile`` (layer table
+``[embed, layer_0..layer_{n-1}, head]``).  ``stage_instance_ranges`` maps
+those cuts onto period-instance ranges; cuts must fall on period boundaries
+(always true for ``period_len == 1`` families).
+
+Backward runs through ``jax.vjp`` closures captured at forward time (the
+emulated worker keeps its residuals in function memory, exactly what the
+paper's activation-memory term ``mu * a_i`` accounts for).  Gradients are
+accumulated in fp32 across micro-batches; ``grad_vector`` flattens them for
+the storage scatter-reduce and ``apply_update`` applies the optimizer on
+fp32 masters (same math as ``testing.pipeline_equiv.reference_step``).
+
+MoE note: the router aux loss is seeded per micro-batch (weight ``1/mu``),
+which matches full-batch routing only when the aux statistic is linear in
+the batch — the same caveat as the shard_map pipeline (see
+``testing/pipeline_equiv.py``); dense families are exact.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.partition import stages_of
+from repro.models import registry
+from repro.models.common import rms_norm, softmax_cross_entropy
+from repro.models.transformer import period_forward
+from repro.optim import Optimizer
+
+
+@dataclass(frozen=True)
+class StageSpan:
+    """What pipeline stage ``index`` of ``n_stages`` owns."""
+
+    index: int
+    n_stages: int
+    inst_lo: int          # first owned period instance
+    inst_hi: int          # one past the last owned instance (may equal lo)
+    owns_embed: bool
+    owns_head: bool
+
+
+def stage_instance_ranges(cfg: ArchConfig, x) -> List[StageSpan]:
+    """Map profile-layer cuts ``x`` (over ``arch_model_profile``'s
+    ``[embed, layers..., head]`` table) to period-instance spans."""
+    L = len(x) + 1
+    expect = cfg.n_layers + 2
+    if L != expect:
+        raise ValueError(
+            f"partition is over {L} profile layers but arch {cfg.name!r} "
+            f"profiles to {expect} ([embed] + {cfg.n_layers} layers + [head])")
+    plen = cfg.period_len
+    spans = []
+    stages = stages_of(tuple(x))
+    for s, (lo, hi) in enumerate(stages):
+        lo_l = max(lo, 1) - 1          # first model layer in the stage
+        hi_l = min(hi, cfg.n_layers) - 1   # last model layer (inclusive)
+        if lo_l > hi_l:                # embed-only or head-only stage
+            inst_lo = inst_hi = 0 if lo == 0 else cfg.n_periods
+        else:
+            if lo_l % plen != 0:
+                raise ValueError(
+                    f"stage {s} starts mid-period (layer {lo_l}, period_len={plen}); "
+                    "numeric execution needs period-aligned cuts")
+            if hi_l != cfg.n_layers - 1 and (hi_l + 1) % plen != 0:
+                raise ValueError(
+                    f"stage {s} ends mid-period (layer {hi_l}, period_len={plen}); "
+                    "numeric execution needs period-aligned cuts")
+            inst_lo = lo_l // plen
+            inst_hi = -(-(hi_l + 1) // plen)
+        spans.append(StageSpan(
+            index=s, n_stages=len(stages), inst_lo=inst_lo, inst_hi=inst_hi,
+            owns_embed=(lo == 0), owns_head=(hi == L - 1),
+        ))
+    return spans
+
+
+class StageWorker:
+    """One serverless function: params + optimizer shard for a stage span."""
+
+    def __init__(self, cfg: ArchConfig, span: StageSpan, full_params: dict,
+                 *, mu: int, optimizer: Optimizer):
+        if cfg.frontend != "none":
+            raise NotImplementedError(
+                "runtime numeric execution covers token-LM archs; "
+                f"frontend={cfg.frontend!r} is not wired up")
+        if cfg.tie_embeddings and span.n_stages > 1:
+            raise NotImplementedError(
+                "tied embeddings span two stages; untie or use a single stage")
+        self.cfg = cfg
+        self.span = span
+        self.mu = mu
+        self.optimizer = optimizer
+        self.dtype = jnp.dtype(cfg.param_dtype)
+
+        p: Dict[str, Any] = {}
+        if span.owns_embed:
+            p["embed"] = full_params["embed"]
+        if span.owns_head:
+            p["final_norm"] = full_params["final_norm"]
+            if cfg.tie_embeddings:
+                if not span.owns_embed:  # unreachable (guarded above)
+                    raise NotImplementedError
+            else:
+                p["head"] = full_params["head"]
+        if span.inst_hi > span.inst_lo:
+            p["layers"] = jax.tree.map(
+                lambda a: a[span.inst_lo:span.inst_hi], full_params["layers"])
+            self.mask = jnp.asarray(
+                registry.active_mask(cfg)[span.inst_lo:span.inst_hi])
+        else:
+            self.mask = None
+        self.params = p
+
+        # fp32 masters + optimizer state, per leaf (ZeRO-less: the stage owns
+        # its whole shard, replicas hold identical copies)
+        self.opt_state = jax.tree.map(
+            lambda a: {"master": a.astype(jnp.float32),
+                       **optimizer.init_state(a.astype(jnp.float32))},
+            self.params)
+
+        flat, self._treedef = jax.tree.flatten(self.params)
+        self._shapes = [l.shape for l in flat]
+        self._sizes = [int(np.prod(l.shape)) for l in flat]
+        self.grad_nbytes = float(sum(self._sizes)) * 4  # fp32 sync payload
+
+        self._vjps: Dict[int, Any] = {}
+        self._grad_acc = None
+
+    # ------------------------------------------------------------- stage math
+    def _stage_fn(self, params, x, batch_mb):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        if self.span.owns_embed:
+            x = registry.embed_inputs(cfg, params, batch_mb)
+        if self.mask is not None:
+            seq = x.shape[1]
+            positions = jnp.arange(seq, dtype=jnp.int32)
+
+            def body(h, xs):
+                inst_params, act_row = xs
+                h, a = period_forward(inst_params, h, act_row, cfg=cfg,
+                                      positions=positions)
+                return h, a
+
+            x, auxs = jax.lax.scan(body, x, (params["layers"], self.mask))
+            aux = aux + jnp.sum(auxs)
+        if self.span.owns_head:
+            h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            head_w = params["embed"] if cfg.tie_embeddings else params["head"]
+            logits = h @ head_w.T
+            labels = batch_mb["labels"]
+            if cfg.causal and not cfg.is_encoder:
+                logits = logits[:, :-1]
+                labels = labels[:, 1:]
+            ce = jnp.mean(softmax_cross_entropy(logits, labels))
+            return ce, aux
+        return x, aux
+
+    # ---------------------------------------------------------------- fwd/bwd
+    def forward(self, m: int, x_in, batch_mb) -> Tuple[Any, float]:
+        """Run the stage on micro-batch ``m``.  Returns (output, aux) where
+        output is the boundary activation — or the micro-batch CE for the
+        last stage."""
+        if self.span.owns_embed:
+            out_aux, vjp = jax.vjp(
+                lambda p: self._stage_fn(p, None, batch_mb), self.params)
+        else:
+            out_aux, vjp = jax.vjp(
+                lambda p, x: self._stage_fn(p, x, batch_mb), self.params,
+                jnp.asarray(x_in))
+        self._vjps[m] = vjp
+        out, aux = out_aux
+        return out, float(aux)
+
+    def backward(self, m: int, g_out) -> Optional[jax.Array]:
+        """VJP for micro-batch ``m``.  ``g_out`` is the cotangent arriving
+        from stage s+1 (ignored on the last stage, which seeds the loss).
+        Returns the cotangent for stage s-1 (None on stage 0)."""
+        vjp = self._vjps.pop(m)
+        seed = jnp.asarray(1.0 / self.mu, jnp.float32)
+        if self.span.owns_head:
+            cot = (seed, seed)
+        else:
+            cot = (jnp.asarray(g_out), seed)
+        grads = vjp(cot)
+        g_params = grads[0]
+        g_in = grads[1] if len(grads) > 1 else None
+        g_params = jax.tree.map(lambda g: g.astype(jnp.float32), g_params)
+        if self._grad_acc is None:
+            self._grad_acc = g_params
+        else:
+            self._grad_acc = jax.tree.map(jnp.add, self._grad_acc, g_params)
+        return g_in
+
+    # ------------------------------------------------------------------- sync
+    def grad_vector(self) -> np.ndarray:
+        """Accumulated stage gradient, flattened fp32 (scatter-reduce payload)."""
+        assert self._grad_acc is not None, "backward() must run first"
+        flat = jax.tree.leaves(self._grad_acc)
+        return np.concatenate([np.asarray(l, np.float32).ravel() for l in flat])
+
+    def apply_update(self, reduced: np.ndarray, step: int) -> None:
+        """Optimizer step from the (already averaged) flat gradient."""
+        parts = []
+        off = 0
+        for shape, size in zip(self._shapes, self._sizes):
+            parts.append(jnp.asarray(reduced[off:off + size]).reshape(shape))
+            off += size
+        assert off == len(reduced), (off, len(reduced))
+        g_tree = jax.tree.unflatten(self._treedef, parts)
+
+        step_idx = jnp.asarray(step, jnp.int32)
+
+        def upd(g, st):
+            sub = {k: v for k, v in st.items() if k != "master"}
+            new_m, new_sub = self.optimizer.update(g, st["master"], sub, step_idx)
+            return new_m, {"master": new_m, **new_sub}
+
+        is_leaf = lambda v: isinstance(v, dict) and "master" in v
+        flat_g = jax.tree.leaves(g_tree)
+        flat_st, st_def = jax.tree.flatten(self.opt_state, is_leaf=is_leaf)
+        outs = [upd(g, st) for g, st in zip(flat_g, flat_st)]
+        flat_p, p_def = jax.tree.flatten(self.params)
+        new_params = [m.astype(p.dtype) for (m, _), p in zip(outs, flat_p)]
+        self.params = jax.tree.unflatten(p_def, new_params)
+        self.opt_state = jax.tree.unflatten(st_def, [st for _, st in outs])
+        self._grad_acc = None
+
+
+def assemble_params(cfg: ArchConfig, workers: List[StageWorker]) -> dict:
+    """Re-assemble monolithic ``registry.init_params``-layout params from one
+    replica's stage workers (for checkpointing / equivalence checks)."""
+    out: Dict[str, Any] = {}
+    layer_parts = [w.params["layers"] for w in workers if "layers" in w.params]
+    if layer_parts:
+        out["layers"] = jax.tree.map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *layer_parts)
+    for w in workers:
+        if w.span.owns_embed:
+            out["embed"] = w.params["embed"]
+        if w.span.owns_head:
+            out["final_norm"] = w.params["final_norm"]
+            if not cfg.tie_embeddings:
+                out["head"] = w.params["head"]
+    return out

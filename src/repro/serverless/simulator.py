@@ -8,6 +8,13 @@ to a longest-path DP over task end-times with per-resource serialization.
 
 Also simulates the data-parallel baselines (LambdaML / HybridPS, ±gradient
 accumulation) under the same platform model.
+
+This module stays *analytic*: it never moves bytes or runs layer math.  The
+executable ground truth is ``repro.serverless.runtime`` — an emulated object
+store plus stage workers that run the same schedule with real JAX numerics
+and per-object transfers (``stage_aggregates`` below is the shared cost
+model).  ``benchmarks/runtime_accuracy.py`` cross-validates the three levels
+(closed form vs this DP vs the runtime engine).
 """
 from __future__ import annotations
 
@@ -58,16 +65,53 @@ def storage_capped_bw(platform: Platform, w: float, n_workers: int) -> float:
     return min(w, cap / n_workers)
 
 
-# ------------------------------------------------------------------- FuncPipe
-def simulate_funcpipe(
+def effective_bandwidth(
+    platform: Platform, mem: int, n_workers: int, *, contention: bool = False
+) -> float:
+    """Per-worker storage bandwidth under §5.4 contention + §5.7 caps — the
+    single derivation shared by the DP below and the runtime engine."""
+    w = platform.bandwidth(mem)
+    if contention:
+        w *= bandwidth_contention(n_workers)
+    return storage_capped_bw(platform, w, n_workers)
+
+
+# --------------------------------------------------- shared per-stage costs
+@dataclass(frozen=True)
+class StageAggregates:
+    """Per-stage cost terms of a FuncPipe configuration.
+
+    Shared between the longest-path DP below and the executable runtime
+    (``repro.serverless.runtime.engine``) so both charge identical compute
+    times, boundary-transfer times, effective bandwidths (§5.4 contention +
+    §5.7 storage-side caps) and per-stage memory."""
+
+    S: int                    # number of pipeline stages
+    mu: int                   # micro-batches per worker
+    d: int                    # data-parallel degree
+    n_workers: int            # S * d
+    t_lat: float              # storage latency
+    t_fc: np.ndarray          # [S] forward compute per micro-batch
+    t_bc: np.ndarray          # [S] backward compute per micro-batch
+    w: np.ndarray             # [S] effective per-worker storage bandwidth
+    out_b: np.ndarray         # [S] forward boundary bytes (stage output)
+    grad_b: np.ndarray        # [S] backward boundary bytes (grad at stage lo)
+    s_stage: np.ndarray       # [S] parameter bytes per stage
+    mem: np.ndarray           # [S] allocated function memory (bytes)
+    t_up_f: np.ndarray        # [S] fwd boundary upload time (stage s -> store)
+    t_dn_f: np.ndarray        # [S] fwd boundary download time (store -> stage s)
+    t_up_b: np.ndarray        # [S] bwd boundary upload time
+    t_dn_b: np.ndarray        # [S] bwd boundary download time
+
+
+def stage_aggregates(
     profile: ModelProfile,
     platform: Platform,
     config: Config,
     total_micro_batches: int,
     *,
-    pipelined_sync: bool = True,
     contention: bool = False,
-) -> SimResult:
+) -> StageAggregates:
     arr = profile.arrays()
     x = np.asarray(config.x)
     d = config.d
@@ -79,20 +123,20 @@ def simulate_funcpipe(
     t_lat = platform.storage_latency
 
     n_workers = S * d
-    bw_mult = bandwidth_contention(n_workers) if contention else 1.0
 
     # per-stage aggregates (memory option constant within stage)
     t_fc = np.array([beta * arr["Tf"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
     t_bc = np.array([beta * arr["Tb"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
     w = np.array([
-        storage_capped_bw(
-            platform, platform.bandwidth(platform.memory_options[z[lo]]) * bw_mult,
-            n_workers)
+        effective_bandwidth(platform, platform.memory_options[z[lo]], n_workers,
+                            contention=contention)
         for lo, hi in stages
     ])
     out_b = np.array([arr["o"][hi] for lo, hi in stages])          # fwd boundary
     grad_b = np.array([arr["g"][lo] for lo, hi in stages])         # bwd boundary
     s_stage = np.array([arr["s"][lo:hi + 1].sum() for lo, hi in stages])
+    mem = np.array([platform.memory_options[z[lo]] for lo, hi in stages],
+                   dtype=np.float64)
 
     t_up_f = out_b / w + t_lat      # stage s uploads its output
     t_dn_f = np.empty(S)
@@ -102,6 +146,32 @@ def simulate_funcpipe(
     t_dn_b = np.empty(S)
     t_dn_b[:-1] = grad_b[1:] / w[:-1] + t_lat
     t_dn_b[-1] = 0.0
+    return StageAggregates(
+        S=S, mu=mu, d=d, n_workers=n_workers, t_lat=t_lat,
+        t_fc=t_fc, t_bc=t_bc, w=w, out_b=out_b, grad_b=grad_b,
+        s_stage=s_stage, mem=mem,
+        t_up_f=t_up_f, t_dn_f=t_dn_f, t_up_b=t_up_b, t_dn_b=t_dn_b,
+    )
+
+
+# ------------------------------------------------------------------- FuncPipe
+def simulate_funcpipe(
+    profile: ModelProfile,
+    platform: Platform,
+    config: Config,
+    total_micro_batches: int,
+    *,
+    pipelined_sync: bool = True,
+    contention: bool = False,
+) -> SimResult:
+    agg = stage_aggregates(profile, platform, config, total_micro_batches,
+                           contention=contention)
+    S, mu, d = agg.S, agg.mu, agg.d
+    t_lat = agg.t_lat
+    t_fc, t_bc, w = agg.t_fc, agg.t_bc, agg.w
+    s_stage = agg.s_stage
+    t_up_f, t_dn_f, t_up_b, t_dn_b = agg.t_up_f, agg.t_dn_f, agg.t_up_b, agg.t_dn_b
+    n_workers = agg.n_workers
 
     NEG = 0.0
     fwd_d_end = np.zeros((S, mu))
@@ -147,7 +217,7 @@ def simulate_funcpipe(
         sync_total = max(sync_total, ts)
         end = max(end, done + ts)
 
-    mem_total = d * sum(platform.memory_options[z[lo]] for lo, hi in stages)
+    mem_total = d * float(agg.mem.sum())
     cost = platform.price_per_gb_s * (mem_total / GB) * end
     comp = float(t_fc.sum() + t_bc.sum())
     return SimResult(

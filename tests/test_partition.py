@@ -1,6 +1,6 @@
 """hat/tilde operators (paper eq (4)) and layer-merging invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core.partition import (
     hat,

@@ -2,7 +2,7 @@
 discrete-event simulator (Table 3 analog)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import planner
 from repro.core.perfmodel import (

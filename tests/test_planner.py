@@ -2,7 +2,7 @@
 dominance over the baseline algorithms on the paper's models."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st
 
 from repro.core import planner
 from repro.core.partition import LayerProfile, ModelProfile, stages_of

@@ -1,0 +1,288 @@
+"""Storage-backed execution engine: store semantics, scatter-reduce numerics
+and timing vs eq (1)/(2), engine timing vs the analytic simulator, and K-step
+numeric equivalence vs the monolithic training path."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.partition import merge_layers
+from repro.core.perfmodel import (
+    Config,
+    sync_time_nonpipelined,
+    sync_time_pipelined,
+)
+from repro.core.profiler import arch_model_profile, paper_model_profile
+from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA, MB
+from repro.serverless.runtime import (
+    Execution,
+    ObjectStore,
+    StageChannel,
+    pipelined_scatter_reduce,
+    run_plan,
+    stage_instance_ranges,
+    three_phase_scatter_reduce,
+)
+from repro.serverless.simulator import simulate_funcpipe
+
+
+# ----------------------------------------------------------------- the store
+def test_store_charges_bandwidth_latency_and_visibility():
+    store = ObjectStore(latency=0.1)
+    a = StageChannel(store, bandwidth=100.0, latency=0.1, name="a")
+    b = StageChannel(store, bandwidth=50.0, latency=0.1, name="b")
+
+    end = a.upload("x", nbytes=200.0, ready=1.0, value="payload")
+    assert end == pytest.approx(1.0 + 200.0 / 100.0 + 0.1)
+    assert store.head("x").visible_at == pytest.approx(end)
+
+    # download can't start before the object is visible; downloader's own
+    # bandwidth applies to the producer's bytes
+    val, t = b.download("x", ready=0.0)
+    assert val == "payload"
+    assert t == pytest.approx(end + 200.0 / 50.0 + 0.1)
+
+    # uplink serializes; a continuation request skips the round-trip
+    e2 = a.upload("y", nbytes=100.0, ready=0.0, new_request=False)
+    assert e2 == pytest.approx(end + 100.0 / 100.0)
+
+    store.delete("x")
+    assert "x" not in store and "y" in store
+    assert store.stats.puts == 2 and store.stats.gets == 1
+
+
+def test_effective_bandwidth_shares_contention_model():
+    from repro.serverless.runtime import effective_bandwidth
+    from repro.serverless.simulator import bandwidth_contention, storage_capped_bw
+
+    mem = ALIBABA_FC.memory_options[-1]
+    for n in (1, 8, 32):
+        got = effective_bandwidth(ALIBABA_FC, mem, n, contention=True)
+        want = storage_capped_bw(
+            ALIBABA_FC, ALIBABA_FC.bandwidth(mem) * bandwidth_contention(n), n)
+        assert got == pytest.approx(want)
+    # AWS S3 is uncapped; Alibaba OSS caps total storage bandwidth (§5.7)
+    assert effective_bandwidth(AWS_LAMBDA, AWS_LAMBDA.memory_options[-1], 64) \
+        == AWS_LAMBDA.bandwidth(AWS_LAMBDA.memory_options[-1])
+    assert effective_bandwidth(ALIBABA_FC, mem, 64) < ALIBABA_FC.bandwidth(mem)
+
+
+def _channels(n, w=70 * MB, lat=0.04):
+    store = ObjectStore(lat)
+    return store, [StageChannel(store, w, lat, name=f"w{r}") for r in range(n)]
+
+
+# ------------------------------------------------------------- scatter-reduce
+@pytest.mark.parametrize("algo", [pipelined_scatter_reduce,
+                                  three_phase_scatter_reduce])
+def test_scatter_reduce_matches_plain_sum(algo):
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(0)
+    n = 4
+    vals = [rng.normal(size=1003).astype(np.float32) for _ in range(n)]
+    store, chans = _channels(n, w=1e8, lat=0.01)
+    reduced, ends = algo(store, chans, nbytes=1003 * 4, ready=[0.0] * n,
+                         values=vals)
+    expect = np.asarray(jnp.sum(jnp.stack(vals), axis=0))
+    np.testing.assert_allclose(reduced, expect, atol=1e-5)
+    assert len(ends) == n and all(e > 0 for e in ends)
+
+
+def test_three_phase_lands_on_eq1():
+    s = 200 * MB
+    for n in (2, 4, 8):
+        store, chans = _channels(n)
+        _, ends = three_phase_scatter_reduce(store, chans, s, [0.0] * n)
+        eq1 = sync_time_nonpipelined(s, 70 * MB, n, 0.04)
+        assert max(ends) == pytest.approx(eq1, rel=1e-9)
+
+
+def test_pipelined_beats_three_phase_and_tracks_eq2():
+    s = 200 * MB
+    for n in (4, 8, 16):
+        store, chans = _channels(n)
+        _, ends3 = three_phase_scatter_reduce(store, chans, s, [0.0] * n)
+        store, chans = _channels(n)
+        _, endsp = pipelined_scatter_reduce(store, chans, s, [0.0] * n)
+        eq2 = sync_time_pipelined(s, 70 * MB, n, 0.04)
+        assert max(endsp) < max(ends3), n
+        assert abs(max(endsp) - eq2) / eq2 < 0.12, n
+
+
+# --------------------------------------------------------- engine vs simulator
+@pytest.mark.parametrize("platform,d,M", [
+    (AWS_LAMBDA, 1, 16),
+    (AWS_LAMBDA, 4, 64),
+    (ALIBABA_FC, 2, 32),
+])
+def test_engine_t_iter_tracks_simulator(platform, d, M):
+    prof = merge_layers(paper_model_profile("bert-large", platform), 8)
+    L = prof.L
+    x = tuple(1 if i in (1, 3, 5) else 0 for i in range(L - 1))
+    j = len(platform.memory_options) - 2
+    cfg = Config(x=x, d=d, z=tuple(j for _ in range(L)))
+    sim = simulate_funcpipe(prof, platform, cfg, M)
+    eng = run_plan(prof, platform, cfg, M, steps=2)
+    assert eng.n_workers == sim.n_workers
+    assert eng.t_iter == pytest.approx(sim.t_iter, rel=0.15)
+    # storage traffic actually flowed: 2 boundaries x (act + grad) x mu x d
+    assert eng.store_stats.puts > 0
+
+
+def test_engine_nonpipelined_sync_is_slower():
+    prof = merge_layers(paper_model_profile("bert-large", AWS_LAMBDA), 6)
+    L = prof.L
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    cfg = Config(x=x, d=8, z=tuple(5 for _ in range(L)))
+    fast = run_plan(prof, AWS_LAMBDA, cfg, 64, pipelined_sync=True)
+    slow = run_plan(prof, AWS_LAMBDA, cfg, 64, pipelined_sync=False)
+    assert fast.breakdown["sync"] < slow.breakdown["sync"]
+    assert fast.t_iter < slow.t_iter
+
+
+# --------------------------------------------------------------- stage spans
+def test_stage_instance_ranges_mapping():
+    import repro.configs as configs
+
+    cfg = dataclasses.replace(configs.get_config("phi3-mini-3.8b").reduced(),
+                              n_layers=4)
+    L = cfg.n_layers + 2
+    # [embed, l0, l1 | l2, l3, head]
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    spans = stage_instance_ranges(cfg, x)
+    assert [(s.inst_lo, s.inst_hi) for s in spans] == [(0, 2), (2, 4)]
+    assert spans[0].owns_embed and not spans[0].owns_head
+    assert spans[1].owns_head and not spans[1].owns_embed
+
+    with pytest.raises(ValueError):
+        stage_instance_ranges(cfg, tuple([1] + [0] * (L - 3)))  # wrong length
+
+
+def test_stage_instance_ranges_rejects_mid_period_cut():
+    import repro.configs as configs
+
+    cfg = configs.get_config("jamba-v0.1-52b").reduced()  # period_len > 1
+    if cfg.period_len == 1:
+        pytest.skip("family reduced to period_len 1")
+    L = cfg.n_layers + 2
+    x = [0] * (L - 1)
+    x[1] = 1  # cut after layer 0: mid-period
+    with pytest.raises(ValueError):
+        stage_instance_ranges(cfg, tuple(x))
+
+
+# ------------------------------------------------- end-to-end numeric training
+def _reference_loop(cfg, params, batches, optimizer, steps):
+    """Monolithic single-device fp32-master loop (same math as the engine)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import registry
+
+    masters = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    states = jax.tree.map(lambda m: optimizer.init_state(m), masters)
+    losses = []
+    for k in range(steps):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: registry.loss_fn(cfg, p, batches[k]), has_aux=True)(params)
+        losses.append(float(loss))
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_m = jax.tree.leaves(masters)
+        flat_s = jax.tree.leaves(
+            states, is_leaf=lambda v: isinstance(v, dict) and v.keys() and all(
+                not isinstance(x, dict) for x in v.values()))
+        outs = [optimizer.update(g.astype(jnp.float32), m, s,
+                                 jnp.asarray(k, jnp.int32))
+                for g, m, s in zip(flat_g, flat_m, flat_s)]
+        masters = jax.tree.unflatten(tdef, [a for a, _ in outs])
+        states = jax.tree.unflatten(tdef, [b for _, b in outs])
+        params = jax.tree.map(lambda m, p: m.astype(p.dtype), masters, params)
+    return params, losses
+
+
+def _param_err(a_tree, b_tree):
+    import jax
+    import jax.numpy as jnp
+    from jax.tree_util import keystr, tree_leaves_with_path
+
+    ref = {keystr(p): l for p, l in tree_leaves_with_path(b_tree)}
+    worst = ("", 0.0)
+    for pth, a in tree_leaves_with_path(a_tree):
+        e = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                  - ref[keystr(pth)].astype(jnp.float32))))
+        if e > worst[1]:
+            worst = (keystr(pth), e)
+    return worst
+
+
+def test_engine_two_steps_match_monolithic():
+    """Acceptance: K=2 storage-backed steps == monolithic loop (fp32), and
+    the engine's simulated t_iter agrees with simulate_funcpipe."""
+    import jax
+
+    import repro.configs as configs
+    from repro.configs.base import InputShape
+    from repro.data.synthetic import make_batch
+    from repro.models import registry
+    from repro.optim import AdamW
+
+    cfg = dataclasses.replace(configs.get_config("phi3-mini-3.8b").reduced(),
+                              n_layers=4)
+    B, S, d, mu, steps = 8, 16, 2, 2, 2
+    shape = InputShape("emu", S, B, "train")
+    prof = arch_model_profile(cfg, AWS_LAMBDA, seq=S, micro_batch=B // (d * mu))
+    L = prof.L
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    config = Config(x=x, d=d, z=tuple(0 for _ in range(L)))
+    params0 = registry.init_params(cfg, jax.random.PRNGKey(0))
+    optimizer = AdamW(lr=1e-2)
+    batches = [make_batch(cfg, shape, step=k) for k in range(steps)]
+
+    res = run_plan(
+        prof, AWS_LAMBDA, config, total_micro_batches=d * mu, steps=steps,
+        execution=Execution(cfg=cfg, optimizer=optimizer, init_params=params0,
+                            batch_fn=lambda k: batches[k]))
+    ref_params, ref_losses = _reference_loop(cfg, params0, batches, optimizer,
+                                             steps)
+
+    for got, want in zip(res.losses, ref_losses):
+        assert abs(got - want) < 2e-4, (got, want)
+    name, err = _param_err(res.params, ref_params)
+    # fp32 summation-order noise through Adam's g/|g| normalization
+    assert err < 2e-3, (name, err)
+
+    sim = simulate_funcpipe(prof, AWS_LAMBDA, config, d * mu)
+    assert res.t_iter == pytest.approx(sim.t_iter, rel=0.15)
+
+
+def test_engine_single_stage_sgd_is_tight():
+    """S=1, d=2: pure scatter-reduce path; SGD keeps the comparison linear,
+    so the match is near machine precision."""
+    import jax
+
+    import repro.configs as configs
+    from repro.configs.base import InputShape
+    from repro.data.synthetic import make_batch
+    from repro.models import registry
+    from repro.optim import SGD
+
+    cfg = configs.get_config("phi3-mini-3.8b").reduced()  # 2 layers
+    B, S = 8, 16
+    shape = InputShape("emu1", S, B, "train")
+    prof = arch_model_profile(cfg, AWS_LAMBDA, seq=S, micro_batch=2)
+    L = prof.L
+    config = Config(x=tuple(0 for _ in range(L - 1)), d=2,
+                    z=tuple(0 for _ in range(L)))
+    params0 = registry.init_params(cfg, jax.random.PRNGKey(1))
+    optimizer = SGD(lr=0.05)
+    batches = [make_batch(cfg, shape, seed=1, step=0)]
+
+    res = run_plan(
+        prof, AWS_LAMBDA, config, total_micro_batches=4, steps=1,
+        execution=Execution(cfg=cfg, optimizer=optimizer, init_params=params0,
+                            batch_fn=lambda k: batches[k]))
+    ref_params, ref_losses = _reference_loop(cfg, params0, batches, optimizer, 1)
+    assert abs(res.losses[0] - ref_losses[0]) < 5e-5
+    name, err = _param_err(res.params, ref_params)
+    assert err < 1e-4, (name, err)
