@@ -1,0 +1,138 @@
+"""Planner engine benchmark: seed scalar co-optimizer vs the batched engine.
+
+For each merge depth, times ``planner.solve`` and records plan quality; where
+both engines run (shallow depths) it asserts they return the *identical*
+plan.  The scalar engine is only timed at depths where it is tractable —
+the batched engine is what makes ``merge_to`` >= 14 usable at all.  Results
+are also written to ``BENCH_planner.json`` at the repo root so the planner
+perf trajectory is tracked from this PR onward.
+
+    PYTHONPATH=src python -m benchmarks.planner_bench [--fast] [--check]
+
+``--check`` (CI smoke guard) exits non-zero when the engines diverge or the
+batched engine is less than 2x faster than scalar at the comparison depth.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+from repro.core import planner
+from repro.core.profiler import paper_model_profile
+from repro.serverless.frameworks import ALPHA_PAIRS
+from repro.serverless.platform import AWS_LAMBDA
+
+MODEL = "bert-large"
+ALPHA = ALPHA_PAIRS[1]
+M = 16
+OUT_JSON = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_planner.json")
+
+# scalar is O(2^L) evaluate calls: ~seconds at merge_to=8, minutes at 10,
+# hopeless beyond — the batched engine runs every depth
+SCALAR_DEPTHS_FULL = (8, 10)
+BATCH_DEPTHS_FULL = (8, 10, 14, 16, 18)
+SCALAR_DEPTHS_FAST = (8,)
+BATCH_DEPTHS_FAST = (8, 10, 14)
+
+
+def _solve(engine: str, merge_to: int):
+    prof = paper_model_profile(MODEL, AWS_LAMBDA)
+    t0 = time.time()
+    r = planner.solve(prof, AWS_LAMBDA, alpha=ALPHA, total_micro_batches=M,
+                      merge_to=merge_to, engine=engine)
+    dt = time.time() - t0
+    return r, dt
+
+
+def rows(fast: bool = False):
+    scalar_depths = SCALAR_DEPTHS_FAST if fast else SCALAR_DEPTHS_FULL
+    batch_depths = BATCH_DEPTHS_FAST if fast else BATCH_DEPTHS_FULL
+    out = []
+    scalar_at = {}
+    for mt in scalar_depths:
+        r, dt = _solve("scalar", mt)
+        scalar_at[mt] = (r, dt)
+        out.append({
+            "bench": "planner", "engine": "scalar", "merge_to": mt,
+            "seconds": round(dt, 3), "objective": r.objective,
+            "t_iter": round(r.evaluation.t_iter, 4),
+            "c_iter": round(r.evaluation.c_iter, 6),
+            "stages": sum(r.config.x) + 1, "d": r.config.d,
+        })
+    base_obj = None
+    for mt in batch_depths:
+        r, dt = _solve("batch", mt)
+        row = {
+            "bench": "planner", "engine": "batch", "merge_to": mt,
+            "seconds": round(dt, 3), "objective": r.objective,
+            "t_iter": round(r.evaluation.t_iter, 4),
+            "c_iter": round(r.evaluation.c_iter, 6),
+            "stages": sum(r.config.x) + 1, "d": r.config.d,
+        }
+        if mt in scalar_at:
+            rs, dts = scalar_at[mt]
+            row["identical_plan"] = (r.config == rs.config
+                                     and r.objective == rs.objective)
+            row["speedup_vs_scalar"] = round(dts / max(dt, 1e-9), 1)
+        if base_obj is None:
+            base_obj = r.objective
+        # plan-quality delta vs the shallowest batched depth (negative = better)
+        row["quality_delta"] = round(r.objective / base_obj - 1, 6)
+        out.append(row)
+    if not fast:  # the tracked perf-trajectory file records full runs only
+        _write_json(out, fast)
+    return out
+
+
+def _write_json(out, fast: bool) -> None:
+    cmp_rows = [r for r in out if r.get("speedup_vs_scalar") is not None]
+    summary = {
+        "model": MODEL, "alpha": list(ALPHA), "micro_batches": M, "fast": fast,
+        "max_speedup_vs_scalar": max((r["speedup_vs_scalar"] for r in cmp_rows),
+                                     default=None),
+        "all_plans_identical": all(r["identical_plan"] for r in cmp_rows),
+        "best_quality_delta": min(r["quality_delta"] for r in out
+                                  if "quality_delta" in r),
+        "rows": out,
+    }
+    with open(OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
+
+
+def check(fast: bool = True) -> int:
+    """CI smoke: fail on engine divergence or a >2x perf regression."""
+    rs = rows(fast)
+    cmp_rows = [r for r in rs if r.get("speedup_vs_scalar") is not None]
+    ok = True
+    if not cmp_rows:
+        print("check: no scalar/batch comparison rows produced")
+        ok = False
+    for r in cmp_rows:
+        if not r["identical_plan"]:
+            print(f"check: engines diverged at merge_to={r['merge_to']}: {r}")
+            ok = False
+        if r["speedup_vs_scalar"] < 2.0:
+            print(f"check: batched engine only {r['speedup_vs_scalar']}x faster "
+                  f"at merge_to={r['merge_to']} (>=2x required)")
+            ok = False
+    for r in rs:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print("check:", "OK" if ok else "FAILED")
+    return 0 if ok else 1
+
+
+def main(argv):
+    if "--check" in argv:
+        raise SystemExit(check(fast="--full" not in argv))
+    for r in rows("--fast" in argv):
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"\nwrote {OUT_JSON}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -38,6 +38,11 @@ def _headline(name: str, rows: list) -> str:
         return f"lowered={len(ok)};skips={len(skip)}"
     if name == "alibaba":
         return f"max_speedup={max(x['speedup_vs_best_baseline'] for x in rows)}"
+    if name == "planner":
+        cmp_rows = [x for x in rows if x.get("speedup_vs_scalar") is not None]
+        sp = max((x["speedup_vs_scalar"] for x in cmp_rows), default="n/a")
+        same = all(x["identical_plan"] for x in cmp_rows)
+        return f"batch_speedup={sp};identical_plans={same}"
     if name == "collectives":
         return f"bidi_link_reduction={rows[0]['link_reduction']}"
     return f"rows={len(rows)}"
@@ -52,6 +57,7 @@ def main() -> None:
         coopt_bench,
         overall_perf,
         perfmodel_accuracy,
+        planner_bench,
         roofline_bench,
         runtime_accuracy,
         scaling,
@@ -63,6 +69,7 @@ def main() -> None:
         ("overall_perf", overall_perf),               # Fig 5
         ("scaling", scaling),                         # Fig 7
         ("coopt", coopt_bench),                       # Fig 9
+        ("planner", planner_bench),                   # batch vs scalar engine
         ("bandwidth_scaling", bandwidth_scaling),     # Fig 11
         ("alibaba", alibaba_bench),                   # Fig 10 / §5.7
         ("perfmodel_accuracy", perfmodel_accuracy),   # Table 3

@@ -6,11 +6,17 @@ For each (model, platform) the planner picks a configuration; the engine then
 clocks, no JAX) and we report the relative iteration-time disagreement of
 each analytic level against the executed ground truth.
 
+Also measures the *host* wall-clock of numeric execution (real JAX fwd/bwd
+through the store) with the per-shape jitted stage cache on vs the seed's
+eager per-micro-batch ``jax.vjp`` retracing — the ``walltime`` rows.
+
     PYTHONPATH=src python -m benchmarks.runtime_accuracy [--fast]
 """
 from __future__ import annotations
 
+import dataclasses
 import sys
+import time
 
 import numpy as np
 
@@ -19,11 +25,52 @@ from repro.core import planner
 from repro.core.profiler import arch_model_profile, paper_model_profile
 from repro.serverless.frameworks import ALPHA_PAIRS
 from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA
-from repro.serverless.runtime import run_plan
+from repro.serverless.runtime import Execution, run_plan
 from repro.serverless.simulator import simulate_funcpipe
 
 MODELS = ["bert-large", "gemma3-4b", "phi3-mini-3.8b"]
 PLATFORMS = [AWS_LAMBDA, ALIBABA_FC]
+
+
+def _walltime_rows(fast: bool):
+    """Host seconds per numeric engine step, jitted stage cache vs eager vjp."""
+    import jax
+
+    import repro.configs as configs
+    from repro.configs.base import InputShape
+    from repro.core.perfmodel import Config
+    from repro.data.synthetic import make_batch
+    from repro.models import registry
+    from repro.optim import AdamW
+
+    cfg = dataclasses.replace(configs.get_config("phi3-mini-3.8b").reduced(),
+                              n_layers=4)
+    B, S, d, mu = 8, 16, 1, 4
+    steps = 2 if fast else 4
+    shape = InputShape("bench", S, B, "train")
+    prof = arch_model_profile(cfg, AWS_LAMBDA, seq=S, micro_batch=B // (d * mu))
+    L = prof.L
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    config = Config(x=x, d=d, z=tuple(0 for _ in range(L)))
+    params0 = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, shape, step=k) for k in range(steps)]
+    out = []
+    times = {}
+    for jit in (False, True):
+        exe = Execution(cfg=cfg, optimizer=AdamW(lr=1e-3), init_params=params0,
+                        batch_fn=lambda k: batches[k], jit=jit)
+        t0 = time.time()
+        run_plan(prof, AWS_LAMBDA, config, total_micro_batches=d * mu,
+                 steps=steps, execution=exe)
+        per_step = (time.time() - t0) / steps
+        times[jit] = per_step
+        out.append({"bench": "runtime_accuracy", "model": "walltime",
+                    "platform": "host", "jit": jit, "steps": steps,
+                    "sec_per_step": round(per_step, 3)})
+    out.append({"bench": "runtime_accuracy", "model": "walltime",
+                "platform": "host", "jit": "speedup",
+                "sec_per_step": round(times[False] / max(times[True], 1e-9), 2)})
+    return out
 
 
 def _profile(model, platform):
@@ -76,6 +123,7 @@ def rows(fast: bool = False):
                 "sim_rel_err": round(max_eng, 4),
                 "model_rel_err": round(max(
                     r.get("model_rel_err", 0.0) for r in out), 4)})
+    out.extend(_walltime_rows(fast))
     return out
 
 
@@ -83,9 +131,12 @@ def main(fast: bool = False):
     rs = rows(fast)
     for r in rs:
         print(",".join(f"{k}={v}" for k, v in r.items()))
-    mx = rs[-1]
+    mx = next(r for r in rs if r["model"] == "MAX")
     print(f"\nmax relative error vs executed engine: "
           f"simulator={mx['sim_rel_err']:.2%} perfmodel={mx['model_rel_err']:.2%}")
+    wt = next(r for r in rs if r.get("jit") == "speedup")
+    print(f"numeric engine wall-clock: {wt['sec_per_step']}x faster with the "
+          f"jitted stage cache")
 
 
 if __name__ == "__main__":

@@ -2,10 +2,14 @@
 resources (MIQP), print the Pareto frontier and the recommended config,
 compare with the baseline algorithms.
 
-    PYTHONPATH=src python examples/plan_serverless.py [model] [global_batch]
+    PYTHONPATH=src python examples/plan_serverless.py [model] [global_batch] [merge_to]
 
 model ∈ paper models (bert-large, amoebanet-d18/36, resnet101) or any
 assigned arch id (planned via the ArchConfig bridge).
+
+The solver runs the batched engine (``perfmodel.evaluate_batch``), so
+planning at merge_to=12 — beyond what the paper's minute-scale MIQP budget
+allowed — is sub-second here; pass a third argument to go deeper still.
 """
 import sys
 
@@ -21,17 +25,18 @@ from repro.serverless.simulator import simulate_funcpipe
 def main():
     model = sys.argv[1] if len(sys.argv) > 1 else "bert-large"
     gb = int(sys.argv[2]) if len(sys.argv) > 2 else 64
+    merge_to = int(sys.argv[3]) if len(sys.argv) > 3 else 12
     if model in ARCH_IDS:
         prof = arch_model_profile(get_config(model), AWS_LAMBDA)
     else:
         prof = paper_model_profile(model, AWS_LAMBDA)
     M = gb // 4
     print(f"model={model} params={prof.param_bytes/2**20:.0f}MB layers={prof.L} "
-          f"global_batch={gb} micro_batches={M}")
+          f"global_batch={gb} micro_batches={M} merge_to={merge_to}")
     results = []
     for alpha in ALPHA_PAIRS:
         r = planner.solve(prof, AWS_LAMBDA, alpha=alpha, total_micro_batches=M,
-                          merge_to=8)
+                          merge_to=merge_to)
         if r is None:
             print(f"alpha={alpha}: infeasible")
             continue

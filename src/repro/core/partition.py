@@ -16,24 +16,70 @@ import numpy as np
 
 
 def hat(u: np.ndarray, x: np.ndarray) -> np.ndarray:
-    """Forward accumulation within partitions: hat_u[i] = u[i] + hat_u[i-1]*(1-x[i-1])."""
+    """Forward accumulation within partitions: hat_u[i] = u[i] + hat_u[i-1]*(1-x[i-1]).
+
+    Batch-aware: ``u`` may be ``[..., L]`` with ``x`` ``[..., L-1]`` — the
+    recurrence runs along the last axis, vectorized over leading axes, with
+    the same per-element operation order as the scalar form (so scalar and
+    batched callers see bit-identical results)."""
     u = np.asarray(u, dtype=np.float64)
-    out = np.zeros_like(u)
-    out[0] = u[0]
-    for i in range(1, len(u)):
-        out[i] = u[i] + out[i - 1] * (1 - x[i - 1])
+    x = np.asarray(x)
+    out = np.empty_like(u)
+    out[..., 0] = u[..., 0]
+    for i in range(1, u.shape[-1]):
+        out[..., i] = u[..., i] + out[..., i - 1] * (1 - x[..., i - 1])
     return out
 
 
 def tilde(u: np.ndarray, x: np.ndarray) -> np.ndarray:
-    """Backward accumulation: tilde_u[i] = u[i] + tilde_u[i+1]*(1-x[i])."""
+    """Backward accumulation: tilde_u[i] = u[i] + tilde_u[i+1]*(1-x[i]).
+
+    Batch-aware along the last axis, like :func:`hat`."""
     u = np.asarray(u, dtype=np.float64)
-    L = len(u)
-    out = np.zeros_like(u)
-    out[L - 1] = u[L - 1]
+    x = np.asarray(x)
+    L = u.shape[-1]
+    out = np.empty_like(u)
+    out[..., L - 1] = u[..., L - 1]
     for i in range(L - 2, -1, -1):
-        out[i] = u[i] + out[i + 1] * (1 - x[i])
+        out[..., i] = u[..., i] + out[..., i + 1] * (1 - x[..., i])
     return out
+
+
+def suffix_sum(u: np.ndarray) -> np.ndarray:
+    """Right-fold suffix sums along the last axis: out[i] = u[i] + out[i+1].
+
+    Both the scalar oracle (`perfmodel.evaluate`) and the batched kernel
+    (`perfmodel.evaluate_batch`) reduce suffixes through this helper so their
+    floating-point association is identical — a requirement for the
+    bit-for-bit property test between the two."""
+    u = np.asarray(u, dtype=np.float64)
+    out = np.empty_like(u)
+    L = u.shape[-1]
+    out[..., L - 1] = u[..., L - 1]
+    for i in range(L - 2, -1, -1):
+        out[..., i] = u[..., i] + out[..., i + 1]
+    return out
+
+
+def suffix_max(u: np.ndarray) -> np.ndarray:
+    """Suffix maxima along the last axis: out[i] = max(u[i], out[i+1])."""
+    u = np.asarray(u, dtype=np.float64)
+    out = np.empty_like(u)
+    L = u.shape[-1]
+    out[..., L - 1] = u[..., L - 1]
+    for i in range(L - 2, -1, -1):
+        np.maximum(u[..., i], out[..., i + 1], out=out[..., i])
+    return out
+
+
+def stage_ids(x: np.ndarray) -> np.ndarray:
+    """Per-layer stage index for a batch of partitions: ``x`` is ``[..., L-1]``
+    boundary bits, the result is ``[..., L]`` with values in ``[0, n_stages)``
+    (the segment-sum companion of :func:`stages_of`)."""
+    x = np.asarray(x, dtype=np.int64)
+    ids = np.zeros(x.shape[:-1] + (x.shape[-1] + 1,), dtype=np.int64)
+    np.cumsum(x, axis=-1, out=ids[..., 1:])
+    return ids
 
 
 def stages_of(x: Sequence[int]) -> List[Tuple[int, int]]:
@@ -82,8 +128,14 @@ class ModelProfile:
         return len(self.layers)
 
     def arrays(self):
+        """Per-layer quantity arrays, built once per profile and cached (the
+        planner hot path used to rebuild this dict on every ``evaluate``
+        call).  The arrays are marked read-only; treat them as immutable."""
+        cached = self.__dict__.get("_arrays_cache")
+        if cached is not None:
+            return cached
         ls = self.layers
-        return {
+        cached = {
             "s": np.array([l.param_bytes for l in ls]),
             "a": np.array([l.act_bytes for l in ls]),
             "o": np.array([l.out_bytes for l in ls]),
@@ -91,6 +143,10 @@ class ModelProfile:
             "Tf": np.array([l.fwd_time for l in ls]),   # [L, J]
             "Tb": np.array([l.bwd_time for l in ls]),
         }
+        for arr in cached.values():
+            arr.setflags(write=False)
+        object.__setattr__(self, "_arrays_cache", cached)
+        return cached
 
     @property
     def param_bytes(self) -> float:

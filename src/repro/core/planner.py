@@ -7,6 +7,26 @@ with layer merging (paper §4) + exhaustive enumeration over (d, partition)
 ``method='exhaustive'`` cross-checks the heuristic on small instances (the
 tests assert they agree).
 
+Two engines drive the search:
+
+  * ``engine='scalar'`` — the seed implementation: one ``perfmodel.evaluate``
+    call per candidate.  Kept as the reference the batched engine is
+    parity-tested against.
+  * ``engine='batch'`` (default) — candidates are enumerated as index arrays
+    and evaluated through ``perfmodel.evaluate_batch``: the coordinate
+    descent runs every (partition, start) trajectory in lockstep, evaluating
+    all (stage, level) neighbors of every incumbent in one batched call per
+    coordinate step; exhaustive mode is one batched call per partition.  The
+    update rule is the exact scalar rule (strict-improvement, first-minimizer
+    tie-breaks), so both engines return the *identical* plan — the batch
+    engine is just 1-2 orders of magnitude faster, which is what lets the
+    default ``merge_to`` sit at 14 instead of the seed's 10.  On monotone
+    platforms (more memory never slower) the batch engine additionally
+    prunes partitions by an objective lower bound (t at max memory, cost at
+    min-feasible memory), which keeps ``merge_to=16+`` interactive; the
+    bound only ever discards partitions that provably cannot tie the
+    incumbent, so exactness is preserved.
+
 Also implements the two comparison algorithms of §5.6:
   * ``tpdmp_solve`` — throughput-maximizing partition under fixed resources,
     grid-searched over resource allocations (TPDMP [63] adaptation);
@@ -23,11 +43,28 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.partition import ModelProfile, merge_layers, stages_of
-from repro.core.perfmodel import Config, Evaluation, evaluate
-from repro.serverless.platform import Platform
+from repro.core.partition import (
+    ModelProfile,
+    hat,
+    merge_layers,
+    stage_ids,
+    stages_of,
+)
+from repro.core.perfmodel import (
+    BatchEvaluation,
+    Config,
+    Evaluation,
+    PerfTables,
+    evaluate,
+    evaluate_batch,
+    perf_tables,
+)
+from repro.serverless.platform import GB, Platform
 
 DEFAULT_D_OPTIONS = (1, 2, 4, 8, 16)
+DEFAULT_MERGE_TO = 14          # seed scalar solver had to stop at 10
+_CHUNK_ROWS = 1 << 17          # max evaluate_batch rows per call
+_CD_SWEEPS = 6
 
 
 @dataclass(frozen=True)
@@ -50,15 +87,19 @@ def _expand_z(stage_mem: Sequence[int], x: Sequence[int], L: int) -> tuple:
 
 
 def _min_feasible_stage_mem(profile, platform, x, d, mu) -> Optional[List[int]]:
-    """Smallest memory option per stage satisfying eq (3b), else None."""
+    """Smallest memory option per stage satisfying eq (3b), else None.
+
+    Stage sums come from the ``hat`` recurrence (same association as the
+    batched path) so both engines agree on feasibility thresholds."""
     arr = profile.arrays()
     opts = platform.memory_options
     sync_f = 4 - 2 * (1 if d == 1 else 0)
+    xa = np.asarray(x, dtype=np.int64)
+    hat_a = hat(arr["a"], xa)
+    hat_s = hat(arr["s"], xa)
     out = []
     for lo, hi in stages_of(x):
-        a = arr["a"][lo : hi + 1].sum()
-        s = arr["s"][lo : hi + 1].sum()
-        need = mu * a + s * sync_f + platform.base_memory
+        need = mu * hat_a[hi] + hat_s[hi] * sync_f + platform.base_memory
         j = next((j for j, m in enumerate(opts) if m >= need), None)
         if j is None:
             return None
@@ -66,15 +107,16 @@ def _min_feasible_stage_mem(profile, platform, x, d, mu) -> Optional[List[int]]:
     return out
 
 
+# ------------------------------------------------------------- scalar engine
 def _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
-             start: List[int], floor: List[int], sweeps: int = 6):
+             start: List[int], floor: List[int], sweeps: int = _CD_SWEEPS):
     J = len(platform.memory_options)
     L = profile.L
     stage_mem = list(start)
     best_cfg = Config(x=tuple(x), d=d, z=_expand_z(stage_mem, x, L))
     best = evaluate(profile, platform, best_cfg, mu * d, pipelined_sync=pipelined_sync)
     if not best.mem_ok:
-        return None, None
+        return None, None, None
     best_obj = best.objective(a1, a2)
     n_stages = len(stage_mem)
     for _ in range(sweeps):
@@ -92,29 +134,35 @@ def _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
                     improved = True
         if not improved:
             break
-    return best_cfg, best
+    return best_cfg, best, best_obj
+
+
+def _cd_starts(init_mem: Sequence[int], J: int) -> List[List[int]]:
+    """Multi-start list for the per-stage memory CD, deduplicated keeping
+    first occurrence: the min-feasible assignment, the max assignment, and
+    uniform levels clipped to the feasibility floor."""
+    n_stages = len(init_mem)
+    starts: List[List[int]] = []
+    for cand in [list(init_mem), [J - 1] * n_stages] + [
+            [max(j, f) for f in init_mem] for j in range(J)]:
+        if cand not in starts:
+            starts.append(cand)
+    return starts
 
 
 def _coordinate_descent(profile, platform, x, d, mu, a1, a2, pipelined_sync,
-                        init_mem: List[int], sweeps: int = 6):
+                        init_mem: List[int], sweeps: int = _CD_SWEEPS):
     """Multi-start coordinate descent on per-stage memory: starts from the
     min-feasible assignment, the max assignment, and uniform levels — greedy
     CD alone gets caught in neighbor-coupled local optima (upload/download
     terms couple adjacent stages)."""
     J = len(platform.memory_options)
-    n_stages = len(init_mem)
-    starts = [list(init_mem), [J - 1] * n_stages]
-    for j in range(J):
-        uniform = [max(j, f) for f in init_mem]
-        if uniform not in starts:
-            starts.append(uniform)
     best_cfg, best_ev, best_obj = None, None, np.inf
-    for start in starts:
-        cfg, ev = _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
-                           start, init_mem, sweeps)
+    for start in _cd_starts(init_mem, J):
+        cfg, ev, obj = _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
+                                start, init_mem, sweeps)
         if cfg is None:
             continue
-        obj = ev.objective(a1, a2)
         if obj < best_obj:
             best_cfg, best_ev, best_obj = cfg, ev, obj
     if best_cfg is None:
@@ -129,19 +177,8 @@ def _partitions(L: int, max_stages: Optional[int] = None):
         yield bits
 
 
-def solve(
-    profile: ModelProfile,
-    platform: Platform,
-    *,
-    alpha: Tuple[float, float],
-    total_micro_batches: int,
-    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = 10,
-    max_stages: Optional[int] = None,
-    method: str = "cd",
-    pipelined_sync: bool = True,
-) -> Optional[PlanResult]:
-    """FuncPipe's co-optimizer.  Returns the best feasible plan or None."""
+def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
+                  merge_to, max_stages, method, pipelined_sync):
     t0 = time.time()
     a1, a2 = alpha
     prof = merge_layers(profile, merge_to)
@@ -181,6 +218,308 @@ def solve(
     return best
 
 
+# ------------------------------------------------------------- batch engine
+def _partition_matrix(L: int, max_stages: Optional[int] = None) -> np.ndarray:
+    """All boundary vectors of ``_partitions`` as an ``[P, L-1]`` matrix, in
+    the same (itertools.product) enumeration order."""
+    if L <= 1:
+        return np.zeros((1, 0), dtype=np.int64)
+    P = 1 << (L - 1)
+    bits = (np.arange(P, dtype=np.int64)[:, None]
+            >> np.arange(L - 2, -1, -1, dtype=np.int64)) & 1
+    if max_stages is not None:
+        bits = bits[bits.sum(axis=1) + 1 <= max_stages]
+    return bits
+
+
+def _stage_layout(X: np.ndarray):
+    """sid [P, L], n_stages [P], per-stage high-layer index [P, S_max]."""
+    sid = stage_ids(X)
+    n_stages = sid[:, -1] + 1
+    S_max = int(n_stages.max())
+    high_pos = np.empty((len(X), S_max), dtype=np.int64)
+    for s in range(S_max):
+        high_pos[:, s] = np.sum(sid <= s, axis=1) - 1
+    return sid, n_stages, high_pos, S_max
+
+
+def _floors_batch(tables: PerfTables, X, high_pos, n_stages, d, mu):
+    """Vectorized `_min_feasible_stage_mem` over a partition matrix: returns
+    the per-stage floor indices [P, S_max] (padded stages clamped to 0) and
+    the feasibility mask [P]."""
+    N = len(X)
+    L = tables.L
+    sync_f = 4 - 2 * (1 if d == 1 else 0)
+    hat_a = hat(np.broadcast_to(tables.a, (N, L)), X)
+    hat_s = hat(np.broadcast_to(tables.s, (N, L)), X)
+    need = mu * hat_a + hat_s * sync_f + tables.base_memory
+    j_need = np.searchsorted(tables.mem_opts, need, side="left")   # [N, L]
+    floor_st = np.take_along_axis(j_need, high_pos, axis=1)        # [N, S_max]
+    s_idx = np.arange(floor_st.shape[1])[None, :]
+    real = s_idx < n_stages[:, None]
+    feasible = np.all(~real | (floor_st < tables.J), axis=1)
+    return np.where(real, floor_st, 0), feasible
+
+
+def _starts_batch(floor_st: np.ndarray, n_stages: np.ndarray, J: int):
+    """Per-partition CD start candidates [P, K, S_max] + validity mask [P, K],
+    mirroring `_cd_starts` (order + keep-first-occurrence dedupe)."""
+    N, S_max = floor_st.shape
+    K = 2 + J
+    cand = np.empty((N, K, S_max), dtype=np.int64)
+    cand[:, 0] = floor_st
+    cand[:, 1] = J - 1
+    for j in range(J):
+        cand[:, 2 + j] = np.maximum(j, floor_st)
+    pad = np.broadcast_to(
+        np.arange(S_max)[None, None, :] >= n_stages[:, None, None], cand.shape)
+    cand[pad] = 0
+    valid = np.ones((N, K), dtype=bool)
+    for k in range(1, K):
+        dup = np.zeros(N, dtype=bool)
+        for kp in range(k):
+            dup |= valid[:, kp] & np.all(cand[:, k] == cand[:, kp], axis=1)
+        valid[:, k] = ~dup
+    return cand, valid
+
+
+def _eval_chunked(profile, platform, tables, X, Z, d, M, pipelined_sync) -> BatchEvaluation:
+    N = len(X)
+    if N <= _CHUNK_ROWS:
+        return evaluate_batch(profile, platform, X, Z, d, M,
+                              pipelined_sync=pipelined_sync, tables=tables)
+    parts = [evaluate_batch(profile, platform, X[lo:lo + _CHUNK_ROWS],
+                            Z[lo:lo + _CHUNK_ROWS], d, M,
+                            pipelined_sync=pipelined_sync, tables=tables)
+             for lo in range(0, N, _CHUNK_ROWS)]
+    return BatchEvaluation(*[np.concatenate([getattr(p, f.name) for p in parts])
+                             for f in dataclasses.fields(BatchEvaluation)])
+
+
+def _cd_lockstep(profile, platform, tables, X, sid, n_stages, floor_st, sm, tp,
+                 d, M, a1, a2, pipelined_sync, sweeps):
+    """Run every (partition, start) CD trajectory in lockstep.
+
+    Each trajectory follows the exact `_cd_from` update rule — per sweep,
+    per stage, evaluate all memory levels of that stage against the
+    trajectory's incumbent and accept the first minimizer iff it strictly
+    improves — but all trajectories' (stage, level) neighbors are evaluated
+    in one `evaluate_batch` call per coordinate step.  Returns per-trajectory
+    best objectives and final stage assignments (both exactly what the
+    scalar engine would compute)."""
+    T_, S_max = sm.shape
+    L = tables.L
+    J = tables.J
+    X_t, sid_t, ns_t, fl_t = X[tp], sid[tp], n_stages[tp], floor_st[tp]
+    Z0 = np.take_along_axis(sm, sid_t, axis=1)
+    be = _eval_chunked(profile, platform, tables, X_t, Z0, d, M, pipelined_sync)
+    best_obj = be.masked_objective(a1, a2)
+    alive = np.isfinite(best_obj)          # infeasible start == scalar None
+    jr = np.arange(J)
+    step = max(1, _CHUNK_ROWS // J)
+    for _ in range(sweeps):
+        improved = np.zeros(T_, dtype=bool)
+        for s in range(S_max):
+            act = np.nonzero(alive & (ns_t > s))[0]
+            for lo in range(0, len(act), step):
+                ai = act[lo:lo + step]
+                A = len(ai)
+                base_z = np.take_along_axis(sm[ai], sid_t[ai], axis=1)   # [A, L]
+                mask_s = sid_t[ai] == s
+                Z_nb = np.where(mask_s[:, None, :], jr[None, :, None],
+                                base_z[:, None, :]).reshape(A * J, L)
+                X_nb = np.repeat(X_t[ai], J, axis=0)
+                be = evaluate_batch(profile, platform, X_nb, Z_nb, d, M,
+                                    pipelined_sync=pipelined_sync, tables=tables)
+                obj = be.masked_objective(a1, a2).reshape(A, J)
+                obj[jr[None, :] < fl_t[ai, s][:, None]] = np.inf
+                bj = np.argmin(obj, axis=1)          # lowest level on ties
+                bv = obj[np.arange(A), bj]
+                acc = bv < best_obj[ai]              # strict improvement only
+                upd = ai[acc]
+                sm[upd, s] = bj[acc]
+                best_obj[upd] = bv[acc]
+                improved[upd] = True
+        alive &= improved
+        if not alive.any():
+            break
+    return best_obj, sm
+
+
+def _reduce_per_partition(tp, best_obj, sm):
+    """Per-partition minimum over start trajectories, first-start tie-break
+    (`tp` must be sorted ascending; trajectories ordered by start rank)."""
+    seg = np.flatnonzero(np.r_[True, tp[1:] != tp[:-1]])
+    pres = tp[seg]
+    min_obj = np.minimum.reduceat(best_obj, seg)
+    tidx = np.arange(len(tp))
+    cand = np.where(best_obj == min_obj[np.searchsorted(pres, tp)], tidx, len(tp))
+    win = np.minimum.reduceat(cand, seg)
+    return pres, min_obj, sm[win]
+
+
+def _lb_screen(profile, platform, tables, X, sid, floor_st, n_stages, d, M,
+               a1, a2, pipelined_sync):
+    """Pruning screen: per-partition objective lower bound + achievable prime.
+
+    The lower bound combines the iteration time at max memory (valid because
+    the tables are monotone) with the cost at the min-feasible allocation;
+    it is shrunk by 1e-9 relative so float noise can never prune a partition
+    that ties the optimum.  Both screening evaluations (floor and max
+    assignments) are real CD start points, so the better of their objectives
+    is an *achievable* incumbent that primes pruning before any CD runs."""
+    N = len(X)
+    Zmax = np.full((N, tables.L), tables.J - 1, dtype=np.int64)
+    be_max = _eval_chunked(profile, platform, tables, X, Zmax, d, M, pipelined_sync)
+    t_min = be_max.t_iter
+    s_idx = np.arange(floor_st.shape[1])[None, :]
+    memfloor = d * np.where(s_idx < n_stages[:, None],
+                            tables.mem_opts[floor_st], 0.0).sum(axis=1)
+    lb = a1 * tables.price_per_gb_s * (memfloor / GB) * t_min + a2 * t_min
+    Zfloor = np.take_along_axis(floor_st, sid, axis=1)
+    be_floor = _eval_chunked(profile, platform, tables, X, Zfloor, d, M,
+                             pipelined_sync)
+    prime = float(min(be_max.masked_objective(a1, a2).min(),
+                      be_floor.masked_objective(a1, a2).min()))
+    return lb * (1 - 1e-9), prime
+
+
+def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
+                 merge_to, max_stages, method, pipelined_sync):
+    t0 = time.time()
+    a1, a2 = alpha
+    prof = merge_layers(profile, merge_to)
+    L = prof.L
+    M = total_micro_batches
+    tables = perf_tables(prof, platform)
+    J = tables.J
+    best_key = None                  # (objective, d_rank, partition enum idx)
+    best_state = None                # (x row, z row, d)
+    X_all = _partition_matrix(L, max_stages)         # d-independent
+    sid_all, ns_all, hp_all, S_max = _stage_layout(X_all)
+
+    for d_rank, d in enumerate(d_options):
+        if M % d or M < d:
+            continue
+        mu = M // d
+        floor_st, feasible = _floors_batch(tables, X_all, hp_all, ns_all, d, mu)
+        idx = np.nonzero(feasible)[0]
+        if len(idx) == 0:
+            continue
+        X_f, sid_f, ns_f, fl_f = X_all[idx], sid_all[idx], ns_all[idx], floor_st[idx]
+
+        if method == "exhaustive":
+            for p in range(len(idx)):
+                S = int(ns_f[p])
+                total = J ** S
+                if total > 10**12:  # int64 digit decode + any hope of finishing
+                    raise ValueError(
+                        f"method='exhaustive' would enumerate {J}^{S} memory "
+                        "combos; use method='cd' at this depth")
+                # stream combos in itertools.product order, chunked so memory
+                # stays bounded (the scalar engine streamed one at a time)
+                pows = J ** np.arange(S - 1, -1, -1, dtype=np.int64)
+                best_o, best_z = np.inf, None
+                for clo in range(0, total, _CHUNK_ROWS):
+                    ci = np.arange(clo, min(clo + _CHUNK_ROWS, total),
+                                   dtype=np.int64)
+                    combos = (ci[:, None] // pows) % J
+                    combos = combos[np.all(combos >= fl_f[p, :S], axis=1)]
+                    if len(combos) == 0:
+                        continue
+                    Z = combos[:, sid_f[p]]                     # [C, L]
+                    X_rep = np.broadcast_to(X_f[p], (len(combos), L - 1))
+                    be = _eval_chunked(prof, platform, tables, X_rep, Z, d, M,
+                                       pipelined_sync)
+                    obj = be.masked_objective(a1, a2)
+                    k = int(np.argmin(obj))                     # first minimizer
+                    if obj[k] < best_o:     # strict: earlier chunks win ties
+                        best_o, best_z = float(obj[k]), Z[k]
+                if best_z is None or not np.isfinite(best_o):
+                    continue
+                key = (best_o, d_rank, int(idx[p]))
+                if best_key is None or key < best_key:
+                    best_key, best_state = key, (X_f[p], best_z, d)
+            continue
+
+        # ---- coordinate descent over all partitions, LB-pruned and chunked
+        cand_sm, valid = _starts_batch(fl_f, ns_f, J)
+        pruning = tables.monotone and a1 >= 0 and a2 >= 0
+        if pruning:
+            lb, prime = _lb_screen(prof, platform, tables, X_f, sid_f, fl_f,
+                                   ns_f, d, M, a1, a2, pipelined_sync)
+            order = np.argsort(lb, kind="stable")
+        else:
+            lb, prime = np.full(len(idx), -np.inf), np.inf
+            order = np.arange(len(idx))
+        # grow chunks: a small first chunk (best LB candidates) establishes
+        # the incumbent cheaply, so the bulk of the space is LB-pruned
+        max_chunk = max(64, _CHUNK_ROWS // ((2 + J) * J))
+        chunk, pos = 64, 0
+        while pos < len(order):
+            sel = order[pos:pos + chunk]
+            pos += chunk
+            chunk = min(max_chunk, chunk * 4)
+            inc = min(prime, best_key[0]) if best_key is not None else prime
+            if pruning and lb[sel].min() > inc:
+                break                    # lb sorted: nothing later can tie
+            sel = sel[lb[sel] <= inc]
+            if len(sel) == 0:
+                continue
+            tp, rank = np.nonzero(valid[sel])
+            sm = cand_sm[sel][tp, rank].copy()
+            b_obj, sm = _cd_lockstep(prof, platform, tables, X_f[sel], sid_f[sel],
+                                     ns_f[sel], fl_f[sel], sm, tp, d, M, a1, a2,
+                                     pipelined_sync, _CD_SWEEPS)
+            pres, min_obj, win_sm = _reduce_per_partition(tp, b_obj, sm)
+            for q in range(len(pres)):
+                if not np.isfinite(min_obj[q]):
+                    continue
+                p_loc = int(pres[q])
+                key = (float(min_obj[q]), d_rank, int(idx[sel[p_loc]]))
+                if best_key is None or key < best_key:
+                    z = np.take_along_axis(win_sm[q][None, :],
+                                           sid_f[sel[p_loc]][None, :], axis=1)[0]
+                    best_key, best_state = key, (X_f[sel[p_loc]], z, d)
+
+    if best_state is None:
+        return None
+    x_row, z_row, d = best_state
+    cfg = Config(x=tuple(int(v) for v in x_row), d=int(d),
+                 z=tuple(int(v) for v in z_row))
+    ev = evaluate(prof, platform, cfg, M, pipelined_sync=pipelined_sync)
+    return PlanResult(cfg, ev, ev.objective(a1, a2), time.time() - t0, prof)
+
+
+def solve(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    alpha: Tuple[float, float],
+    total_micro_batches: int,
+    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
+    merge_to: int = DEFAULT_MERGE_TO,
+    max_stages: Optional[int] = None,
+    method: str = "cd",
+    pipelined_sync: bool = True,
+    engine: str = "batch",
+) -> Optional[PlanResult]:
+    """FuncPipe's co-optimizer.  Returns the best feasible plan or None.
+
+    ``engine='batch'`` (default) and ``engine='scalar'`` return identical
+    plans; the batch engine evaluates candidate sets through
+    ``perfmodel.evaluate_batch`` and is the one fast enough for
+    ``merge_to`` >= 14."""
+    kw = dict(alpha=alpha, total_micro_batches=total_micro_batches,
+              d_options=d_options, merge_to=merge_to, max_stages=max_stages,
+              method=method, pipelined_sync=pipelined_sync)
+    if engine == "batch":
+        return _solve_batch(profile, platform, **kw)
+    if engine == "scalar":
+        return _solve_scalar(profile, platform, **kw)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
 # ------------------------------------------------------------------ baselines
 def tpdmp_solve(
     profile: ModelProfile,
@@ -189,8 +528,9 @@ def tpdmp_solve(
     alpha: Tuple[float, float],
     total_micro_batches: int,
     d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = 10,
+    merge_to: int = DEFAULT_MERGE_TO,
     pipelined_sync: bool = True,
+    engine: str = "batch",
 ) -> Optional[PlanResult]:
     """Throughput-only partitioning (TPDMP-style) under a grid of fixed
     resource allocations; the objective selects among grid points (§5.1)."""
@@ -200,10 +540,35 @@ def tpdmp_solve(
     L = prof.L
     J = len(platform.memory_options)
     best: Optional[PlanResult] = None
+    if engine == "batch":
+        M = total_micro_batches
+        tables = perf_tables(prof, platform)
+        X_all = _partition_matrix(L)
+        for d in d_options:
+            if M % d or M < d:
+                continue
+            for j in range(J):
+                Z = np.full((len(X_all), L), j, dtype=np.int64)
+                be = _eval_chunked(prof, platform, tables, X_all, Z, d, M,
+                                   pipelined_sync)
+                t = np.where(be.mem_ok, be.t_iter, np.inf)
+                k = int(np.argmin(t))                # first fastest partition
+                if not np.isfinite(t[k]):
+                    continue
+                ev = be.pick(k)
+                obj = ev.objective(a1, a2)
+                if best is None or obj < best.objective:
+                    cfg = Config(x=tuple(int(v) for v in X_all[k]), d=d,
+                                 z=tuple([j] * L))
+                    best = PlanResult(cfg, ev, obj, 0.0, prof)
+        if best is not None:
+            best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+        return best
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}")
     for d in d_options:
         if total_micro_batches % d or total_micro_batches < d:
             continue
-        mu = total_micro_batches // d
         for j in range(J):  # uniform memory grid
             best_t, best_cfg, best_ev = np.inf, None, None
             for x in _partitions(L):
@@ -229,19 +594,26 @@ def bayes_solve(
     alpha: Tuple[float, float],
     total_micro_batches: int,
     d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = 10,
+    merge_to: int = DEFAULT_MERGE_TO,
     rounds: int = 100,
     seed: int = 0,
     pipelined_sync: bool = True,
+    batch_size: int = 16,
 ) -> Optional[PlanResult]:
     """Black-box joint search (paper's Bayes baseline): seeded random
     proposals + local mutation of the incumbent, evaluated on the performance
-    model (the paper does the same to avoid measurement cost, App. E)."""
+    model (the paper does the same to avoid measurement cost, App. E).
+
+    Proposals are drawn in chunks of ``batch_size`` (mutations within a
+    chunk share the incumbent at chunk start) and each chunk is evaluated
+    through the batched kernel; ``batch_size=1`` recovers the fully
+    sequential seed behavior."""
     t0 = time.time()
     a1, a2 = alpha
     prof = merge_layers(profile, merge_to)
     L = prof.L
     J = len(platform.memory_options)
+    tables = perf_tables(prof, platform)
     rng = np.random.default_rng(seed)
     ds = [d for d in d_options if total_micro_batches % d == 0 and total_micro_batches >= d]
     best: Optional[PlanResult] = None
@@ -262,16 +634,30 @@ def bayes_solve(
         stage_mem = list(rng.integers(0, J, size=sum(x) + 1))
         return x, d, stage_mem
 
-    for _ in range(rounds):
-        x, d, stage_mem = propose()
-        cfg = Config(x=tuple(x), d=d, z=_expand_z(stage_mem, x, L))
-        ev = evaluate(prof, platform, cfg, total_micro_batches,
-                      pipelined_sync=pipelined_sync)
-        if not ev.mem_ok:
-            continue
-        obj = ev.objective(a1, a2)
-        if best is None or obj < best.objective:
-            best = PlanResult(cfg, ev, obj, 0.0, prof)
+    done = 0
+    while done < rounds:
+        n = min(batch_size, rounds - done)
+        done += n
+        props = [propose() for _ in range(n)]
+        cfgs = [Config(x=tuple(x), d=d, z=_expand_z(sm, x, L))
+                for x, d, sm in props]
+        evs: List[Optional[Evaluation]] = [None] * n
+        by_d = {}
+        for i, cfg in enumerate(cfgs):
+            by_d.setdefault(cfg.d, []).append(i)
+        for d, ids in by_d.items():
+            X = np.array([cfgs[i].x for i in ids], dtype=np.int64).reshape(len(ids), L - 1)
+            Z = np.array([cfgs[i].z for i in ids], dtype=np.int64)
+            be = evaluate_batch(prof, platform, X, Z, d, total_micro_batches,
+                                pipelined_sync=pipelined_sync, tables=tables)
+            for row, i in enumerate(ids):
+                evs[i] = be.pick(row)
+        for cfg, ev in zip(cfgs, evs):
+            if not ev.mem_ok:
+                continue
+            obj = ev.objective(a1, a2)
+            if best is None or obj < best.objective:
+                best = PlanResult(cfg, ev, obj, 0.0, prof)
     if best is not None:
         best = dataclasses.replace(best, solve_seconds=time.time() - t0)
     return best

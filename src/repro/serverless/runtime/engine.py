@@ -50,6 +50,7 @@ class Execution:
     optimizer: Any                            # repro.optim.Optimizer
     init_params: dict                         # registry.init_params layout
     batch_fn: Callable[[int], dict]           # step -> global batch (leaves [B, ...])
+    jit: bool = True                          # jit-cache stage fwd/bwd per shape
 
 
 @dataclass(frozen=True)
@@ -112,7 +113,8 @@ def run_plan(
         spans = stage_instance_ranges(execution.cfg, config.x)
         assert len(spans) == S
         workers = [[StageWorker(execution.cfg, spans[s], execution.init_params,
-                                mu=mu, optimizer=execution.optimizer)
+                                mu=mu, optimizer=execution.optimizer,
+                                jit=execution.jit)
                     for r in range(d)] for s in range(S)]
 
     metrics: List[Dict[str, float]] = []

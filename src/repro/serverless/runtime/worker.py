@@ -15,12 +15,18 @@ profile produced by ``core.profiler.arch_model_profile`` (layer table
 those cuts onto period-instance ranges; cuts must fall on period boundaries
 (always true for ``period_len == 1`` families).
 
-Backward runs through ``jax.vjp`` closures captured at forward time (the
-emulated worker keeps its residuals in function memory, exactly what the
-paper's activation-memory term ``mu * a_i`` accounts for).  Gradients are
-accumulated in fp32 across micro-batches; ``grad_vector`` flattens them for
-the storage scatter-reduce and ``apply_update`` applies the optimizer on
-fp32 masters (same math as ``testing.pipeline_equiv.reference_step``).
+Backward runs through ``jax.vjp``.  With ``jit=True`` (default) the worker
+caches a jitted forward and a jitted recompute-backward per input-shape
+signature — the seed implementation re-traced an un-jitted ``jax.vjp``
+closure on every micro-batch, which dominated engine wall-clock (see the
+``walltime`` rows of ``benchmarks/runtime_accuracy.py``).  The jitted
+backward rematerializes the forward inside the VJP instead of holding the
+eager residual closure; either way the emulated worker keeps residuals in
+function memory, exactly what the paper's activation-memory term
+``mu * a_i`` accounts for.  Gradients are accumulated in fp32 across
+micro-batches; ``grad_vector`` flattens them for the storage scatter-reduce
+and ``apply_update`` applies the optimizer on fp32 masters (same math as
+``testing.pipeline_equiv.reference_step``).
 
 MoE note: the router aux loss is seeded per micro-batch (weight ``1/mu``),
 which matches full-batch routing only when the aux statistic is linear in
@@ -95,7 +101,7 @@ class StageWorker:
     """One serverless function: params + optimizer shard for a stage span."""
 
     def __init__(self, cfg: ArchConfig, span: StageSpan, full_params: dict,
-                 *, mu: int, optimizer: Optimizer):
+                 *, mu: int, optimizer: Optimizer, jit: bool = True):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "runtime numeric execution covers token-LM archs; "
@@ -142,6 +148,9 @@ class StageWorker:
 
         self._vjps: Dict[int, Any] = {}
         self._grad_acc = None
+        self.jit = jit
+        self._saved_inputs: Dict[int, Tuple[Any, Any]] = {}
+        self._jitted: Dict[Any, Tuple[Any, Any]] = {}  # shape sig -> (fwd, bwd)
 
     # ------------------------------------------------------------- stage math
     def _stage_fn(self, params, x, batch_mb):
@@ -173,11 +182,54 @@ class StageWorker:
             return ce, aux
         return x, aux
 
+    # ------------------------------------------------------------- jit cache
+    def _shape_sig(self, x_in, batch_mb):
+        leaf = lambda a: (tuple(a.shape), str(jnp.asarray(a).dtype))
+        x_sig = None if x_in is None else leaf(x_in)
+        b_sig = tuple(sorted((k, leaf(v)) for k, v in batch_mb.items()))
+        return (x_sig, b_sig)
+
+    def _get_jitted(self, sig):
+        """Jitted (fwd, bwd) pair for one (stage-shape, micro-batch-shape)
+        signature.  Traced once per signature instead of per micro-batch;
+        the backward recomputes the forward inside the VJP so no eager
+        closure needs to survive between the two calls."""
+        fns = self._jitted.get(sig)
+        if fns is not None:
+            return fns
+
+        def fwd_fn(params, x_in, batch_mb):
+            return self._stage_fn(params, x_in, batch_mb)
+
+        def bwd_fn(params, x_in, batch_mb, g_out):
+            seed = jnp.asarray(1.0 / self.mu, jnp.float32)
+            if self.span.owns_embed:
+                _, vjp = jax.vjp(lambda p: self._stage_fn(p, None, batch_mb),
+                                 params)
+            else:
+                _, vjp = jax.vjp(lambda p, x: self._stage_fn(p, x, batch_mb),
+                                 params, x_in)
+            cot = (seed, seed) if self.span.owns_head else (g_out, seed)
+            grads = vjp(cot)
+            g_params = jax.tree.map(lambda g: g.astype(jnp.float32), grads[0])
+            g_in = grads[1] if len(grads) > 1 else None
+            return g_params, g_in
+
+        fns = (jax.jit(fwd_fn), jax.jit(bwd_fn))
+        self._jitted[sig] = fns
+        return fns
+
     # ---------------------------------------------------------------- fwd/bwd
     def forward(self, m: int, x_in, batch_mb) -> Tuple[Any, float]:
         """Run the stage on micro-batch ``m``.  Returns (output, aux) where
         output is the boundary activation — or the micro-batch CE for the
         last stage."""
+        if self.jit:
+            x_val = None if self.span.owns_embed else jnp.asarray(x_in)
+            fwd, _ = self._get_jitted(self._shape_sig(x_val, batch_mb))
+            out, aux = fwd(self.params, x_val, batch_mb)
+            self._saved_inputs[m] = (x_val, batch_mb)
+            return out, float(aux)
         if self.span.owns_embed:
             out_aux, vjp = jax.vjp(
                 lambda p: self._stage_fn(p, None, batch_mb), self.params)
@@ -189,10 +241,23 @@ class StageWorker:
         out, aux = out_aux
         return out, float(aux)
 
+    def _accumulate(self, g_params) -> None:
+        if self._grad_acc is None:
+            self._grad_acc = g_params
+        else:
+            self._grad_acc = jax.tree.map(jnp.add, self._grad_acc, g_params)
+
     def backward(self, m: int, g_out) -> Optional[jax.Array]:
         """VJP for micro-batch ``m``.  ``g_out`` is the cotangent arriving
         from stage s+1 (ignored on the last stage, which seeds the loss).
         Returns the cotangent for stage s-1 (None on stage 0)."""
+        if self.jit:
+            x_val, batch_mb = self._saved_inputs.pop(m)
+            _, bwd = self._get_jitted(self._shape_sig(x_val, batch_mb))
+            g_val = None if self.span.owns_head else jnp.asarray(g_out)
+            g_params, g_in = bwd(self.params, x_val, batch_mb, g_val)
+            self._accumulate(g_params)
+            return g_in
         vjp = self._vjps.pop(m)
         seed = jnp.asarray(1.0 / self.mu, jnp.float32)
         if self.span.owns_head:
@@ -203,10 +268,7 @@ class StageWorker:
         g_params = grads[0]
         g_in = grads[1] if len(grads) > 1 else None
         g_params = jax.tree.map(lambda g: g.astype(jnp.float32), g_params)
-        if self._grad_acc is None:
-            self._grad_acc = g_params
-        else:
-            self._grad_acc = jax.tree.map(jnp.add, self._grad_acc, g_params)
+        self._accumulate(g_params)
         return g_in
 
     # ------------------------------------------------------------------- sync

@@ -27,6 +27,7 @@ import numpy as np
 from repro.core.partition import ModelProfile, stages_of
 from repro.core.perfmodel import (
     Config,
+    perf_tables,
     sync_time_nonpipelined,
     sync_time_pipelined,
 )
@@ -112,31 +113,35 @@ def stage_aggregates(
     *,
     contention: bool = False,
 ) -> StageAggregates:
-    arr = profile.arrays()
+    tables = perf_tables(profile, platform)   # shared with evaluate/evaluate_batch
     x = np.asarray(config.x)
     d = config.d
     mu = max(1, total_micro_batches // d)
     stages = stages_of(x)
     S = len(stages)
     z = np.asarray(config.z)
-    beta = platform.contention_beta
-    t_lat = platform.storage_latency
+    t_lat = tables.t_lat
+    L = tables.L
+    los = np.array([lo for lo, _ in stages])
+    his = np.array([hi for _, hi in stages])
 
     n_workers = S * d
 
-    # per-stage aggregates (memory option constant within stage)
-    t_fc = np.array([beta * arr["Tf"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
-    t_bc = np.array([beta * arr["Tb"][lo:hi + 1, z[lo]].sum() for lo, hi in stages])
+    # per-stage aggregates (memory option constant within stage) from the
+    # precomputed per-(layer, option) tables — same beta-scaled compute terms
+    # the closed-form model charges
+    lidx = np.arange(L)
+    t_fc = np.add.reduceat(tables.Tf_beta[lidx, z], los)
+    t_bc = np.add.reduceat(tables.Tb_beta[lidx, z], los)
     w = np.array([
         effective_bandwidth(platform, platform.memory_options[z[lo]], n_workers,
                             contention=contention)
-        for lo, hi in stages
+        for lo in los
     ])
-    out_b = np.array([arr["o"][hi] for lo, hi in stages])          # fwd boundary
-    grad_b = np.array([arr["g"][lo] for lo, hi in stages])         # bwd boundary
-    s_stage = np.array([arr["s"][lo:hi + 1].sum() for lo, hi in stages])
-    mem = np.array([platform.memory_options[z[lo]] for lo, hi in stages],
-                   dtype=np.float64)
+    out_b = tables.o[his]                                          # fwd boundary
+    grad_b = tables.g[los]                                         # bwd boundary
+    s_stage = np.add.reduceat(tables.s, los)
+    mem = tables.mem_opts[z[los]]
 
     t_up_f = out_b / w + t_lat      # stage s uploads its output
     t_dn_f = np.empty(S)

@@ -1,5 +1,8 @@
 """Properties of the paper's performance model + validation against the
-discrete-event simulator (Table 3 analog)."""
+discrete-event simulator (Table 3 analog), and the bit-for-bit equivalence
+of the batched kernel against the scalar oracle."""
+import dataclasses
+
 import numpy as np
 import pytest
 from _hypo import given, settings, st
@@ -8,12 +11,14 @@ from repro.core import planner
 from repro.core.perfmodel import (
     Config,
     evaluate,
+    evaluate_batch,
+    perf_tables,
     sync_time_nonpipelined,
     sync_time_pipelined,
 )
 from repro.core.profiler import paper_model_profile
-from repro.core.partition import merge_layers
-from repro.serverless.platform import AWS_LAMBDA
+from repro.core.partition import LayerProfile, ModelProfile, merge_layers
+from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA, MB
 from repro.serverless.simulator import simulate_funcpipe
 
 
@@ -75,6 +80,92 @@ def test_bandwidth_monotonicity():
         if prev is not None:
             assert ev.t_iter <= prev + 1e-9
         prev = ev.t_iter
+
+
+# --------------------------------------------- batched kernel == scalar oracle
+def _random_instance(seed: int):
+    """Random (profile, platform, X, Z, d, M, pipelined) evaluation batch."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(1, 9))
+    base = AWS_LAMBDA if rng.random() < 0.5 else ALIBABA_FC
+    J = int(rng.integers(1, len(base.memory_options) + 1))
+    platform = dataclasses.replace(base, memory_options=base.memory_options[:J])
+    layers = []
+    for i in range(L):
+        fwd = tuple(float(rng.uniform(0.05, 2.0) / (j + 1)) for j in range(J))
+        layers.append(LayerProfile(
+            name=f"l{i}",
+            param_bytes=float(rng.uniform(5, 300)) * MB,
+            act_bytes=float(rng.uniform(5, 150)) * MB,
+            out_bytes=float(rng.uniform(1, 50)) * MB,
+            grad_out_bytes=float(rng.uniform(1, 50)) * MB,
+            fwd_time=fwd,
+            bwd_time=tuple(2 * t for t in fwd),
+        ))
+    profile = ModelProfile(name=f"rand{seed}", layers=tuple(layers))
+    N = int(rng.integers(1, 24))
+    X = rng.integers(0, 2, size=(N, L - 1))
+    Z = rng.integers(0, J, size=(N, L))
+    d = int(rng.choice([1, 2, 3, 4, 8, 16]))
+    M = int(rng.integers(1, 65))
+    pipelined = bool(rng.random() < 0.5)
+    return profile, platform, X, Z, d, M, pipelined
+
+
+def _assert_batch_matches_scalar(seed: int):
+    profile, platform, X, Z, d, M, pipelined = _random_instance(seed)
+    be = evaluate_batch(profile, platform, X, Z, d, M, pipelined_sync=pipelined)
+    assert len(be) == len(X)
+    for n in range(len(X)):
+        cfg = Config(x=tuple(int(v) for v in X[n]), d=d,
+                     z=tuple(int(v) for v in Z[n]))
+        ev = evaluate(profile, platform, cfg, M, pipelined_sync=pipelined)
+        got = be.pick(n)
+        # bit-for-bit: the kernel and the oracle share their reduction order
+        assert got.t_iter == ev.t_iter, (seed, n)
+        assert got.c_iter == ev.c_iter, (seed, n)
+        assert got.t_f == ev.t_f, (seed, n)
+        assert got.t_sync_max == ev.t_sync_max, (seed, n)
+        assert got.mem_ok == ev.mem_ok, (seed, n)
+        assert got.c_mem_gb == ev.c_mem_gb, (seed, n)
+        a1, a2 = 1.0, 2**19 * 1e-9
+        assert be.objective(a1, a2)[n] == ev.objective(a1, a2), (seed, n)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=100, deadline=None)
+def test_evaluate_batch_matches_scalar_property(seed):
+    """Hypothesis sweep: evaluate_batch == N scalar evaluate calls, exactly."""
+    _assert_batch_matches_scalar(seed)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_evaluate_batch_matches_scalar_seeded(seed):
+    """Deterministic subset of the property test (runs without hypothesis)."""
+    _assert_batch_matches_scalar(seed)
+
+
+def test_evaluate_batch_paper_model():
+    """Sanity on a real profile: all partitions of a merged bert at once."""
+    prof = merge_layers(paper_model_profile("bert-large", AWS_LAMBDA), 6)
+    L, J = prof.L, len(AWS_LAMBDA.memory_options)
+    P = 1 << (L - 1)
+    X = (np.arange(P)[:, None] >> np.arange(L - 2, -1, -1)) & 1
+    Z = np.full((P, L), J - 1)
+    be = evaluate_batch(prof, AWS_LAMBDA, X, Z, 4, 16)
+    for n in (0, P // 3, P - 1):
+        ev = evaluate(prof, AWS_LAMBDA,
+                      Config(x=tuple(int(v) for v in X[n]), d=4, z=tuple([J - 1] * L)), 16)
+        assert be.pick(n) == ev
+
+
+def test_perf_tables_cached_and_monotone():
+    prof = merge_layers(paper_model_profile("bert-large", AWS_LAMBDA), 6)
+    t1 = perf_tables(prof, AWS_LAMBDA)
+    t2 = perf_tables(prof, AWS_LAMBDA)
+    assert t1 is t2                       # lru-cached
+    assert t1.monotone                    # more memory is never slower
+    assert prof.arrays() is prof.arrays()  # arrays dict built once per profile
 
 
 def test_memory_constraint_enforced():

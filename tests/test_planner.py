@@ -50,6 +50,75 @@ def test_cd_matches_exhaustive_small(seed):
     assert a.objective <= b.objective * 1.02 + 1e-12
 
 
+# --------------------------------------------- batched engine == seed scalar
+def _assert_same_plan(a, b):
+    assert (a is None) == (b is None)
+    if a is not None:
+        assert a.config == b.config
+        assert a.objective == b.objective
+        assert a.evaluation == b.evaluation
+
+
+@given(seed=st.integers(0, 60))
+@settings(max_examples=10, deadline=None)
+def test_batch_engine_parity_random(seed):
+    """The vectorized solve returns the identical plan as the seed scalar
+    solver — both methods — on random small instances."""
+    rng = np.random.default_rng(seed)
+    prof = random_profile(rng, L=4, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=4)
+    for method in ("cd", "exhaustive"):
+        _assert_same_plan(
+            planner.solve(prof, SMALL, method=method, engine="scalar", **kw),
+            planner.solve(prof, SMALL, method=method, engine="batch", **kw))
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("method", ["cd", "exhaustive"])
+def test_batch_engine_parity_seeded(seed, method):
+    """Deterministic subset of the parity property (no hypothesis needed)."""
+    rng = np.random.default_rng(seed + 100)
+    prof = random_profile(rng, L=4, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=4)
+    _assert_same_plan(
+        planner.solve(prof, SMALL, method=method, engine="scalar", **kw),
+        planner.solve(prof, SMALL, method=method, engine="batch", **kw))
+
+
+@pytest.mark.parametrize("alpha", [(1.0, 0.0), (1.0, 2**19 * 1e-9)])
+def test_batch_engine_parity_paper_model(alpha):
+    """Parity on a real profile at the seed's working depth."""
+    prof = paper_model_profile("amoebanet-d18", AWS_LAMBDA)
+    kw = dict(alpha=alpha, total_micro_batches=16, merge_to=8)
+    _assert_same_plan(planner.solve(prof, AWS_LAMBDA, engine="scalar", **kw),
+                      planner.solve(prof, AWS_LAMBDA, engine="batch", **kw))
+
+
+def test_tpdmp_engine_parity():
+    prof = paper_model_profile("bert-large", AWS_LAMBDA)
+    kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=16, merge_to=8)
+    _assert_same_plan(planner.tpdmp_solve(prof, AWS_LAMBDA, engine="scalar", **kw),
+                      planner.tpdmp_solve(prof, AWS_LAMBDA, engine="batch", **kw))
+
+
+def test_deep_merge_solves_fast_and_matches_quality():
+    """The point of the batched engine: merge_to=16 (2^15 partitions per d,
+    hopeless for the scalar solver) completes in well under a minute, and its
+    plan quality tracks the shallow space.  The greedy merge boundaries of
+    different depths don't nest, so the objectives differ by small alignment
+    deltas in either direction — assert they stay within 2%."""
+    prof = paper_model_profile("bert-large", AWS_LAMBDA)
+    kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=16)
+    shallow = planner.solve(prof, AWS_LAMBDA, merge_to=8, **kw)
+    deep = planner.solve(prof, AWS_LAMBDA, merge_to=16, **kw)
+    assert shallow is not None and deep is not None
+    assert deep.evaluation.mem_ok
+    assert deep.solve_seconds < 60.0
+    assert deep.objective <= shallow.objective * 1.02
+
+
 @pytest.mark.parametrize("model", ["resnet101", "amoebanet-d18", "bert-large"])
 def test_plans_feasible_and_consistent(model):
     prof = paper_model_profile(model, AWS_LAMBDA)
