@@ -156,9 +156,14 @@ def run_pair(pair, out_dir=RESULTS):
     return log
 
 
-def main():
-    idxs = [int(a) for a in sys.argv[1:]] or range(len(PAIRS))
-    for i in idxs:
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description="per-pair perf iteration logs")
+    ap.add_argument("indices", nargs="*", type=int,
+                    help=f"pair indices 0..{len(PAIRS) - 1} (default: all)")
+    args = ap.parse_args(argv)
+    for i in args.indices or range(len(PAIRS)):
         run_pair(PAIRS[i])
 
 

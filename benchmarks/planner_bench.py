@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import json
 import os
-import sys
 import time
 
 from repro.core import planner
@@ -126,13 +125,22 @@ def check(fast: bool = True) -> int:
     return 0 if ok else 1
 
 
-def main(argv):
-    if "--check" in argv:
-        raise SystemExit(check(fast="--full" not in argv))
-    for r in rows("--fast" in argv):
+def main(argv=None):
+    import argparse
+
+    ap = argparse.ArgumentParser(description="batch-vs-scalar planner bench")
+    ap.add_argument("--check", action="store_true",
+                    help="CI gate: parity + >=2x speedup")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="with --check: run the full (non-fast) sweep")
+    args = ap.parse_args(argv)
+    if args.check:
+        raise SystemExit(check(fast=not args.full))
+    for r in rows(args.fast):
         print(",".join(f"{k}={v}" for k, v in r.items()))
     print(f"\nwrote {OUT_JSON}")
 
 
 if __name__ == "__main__":
-    main(sys.argv[1:])
+    main()

@@ -7,7 +7,6 @@ times its benchmark module and carries the module's headline derived metric.
 """
 from __future__ import annotations
 
-import sys
 import time
 
 
@@ -48,8 +47,28 @@ def _headline(name: str, rows: list) -> str:
     return f"rows={len(rows)}"
 
 
-def main() -> None:
-    fast = "--fast" in sys.argv
+# bench name -> module path; `python -m repro bench --list` prints these
+BENCH_NAMES = (
+    "scatter_reduce", "overall_perf", "scaling", "coopt", "planner",
+    "bandwidth_scaling", "alibaba", "perfmodel_accuracy", "runtime_accuracy",
+    "roofline", "collectives",
+)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.run")
+    # no choices= here: py3.10 argparse validates the empty default against it
+    ap.add_argument("names", nargs="*",
+                    help=f"bench names to run (default: all): {BENCH_NAMES}")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args(argv)
+    unknown = set(args.names) - set(BENCH_NAMES)
+    if unknown:
+        ap.error(f"unknown bench names {sorted(unknown)}; "
+                 f"choose from {BENCH_NAMES}")
+    fast = args.fast
     from benchmarks import (
         alibaba_bench,
         bandwidth_scaling,
@@ -77,6 +96,11 @@ def main() -> None:
         ("roofline", roofline_bench),                 # deliverable (g)
         ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
     ]
+    # BENCH_NAMES exists so --list stays import-light; keep it honest
+    assert tuple(n for n, _ in benches) == BENCH_NAMES, \
+        "BENCH_NAMES is out of sync with the benches list"
+    if args.names:
+        benches = [(n, m) for n, m in benches if n in args.names]
     print("name,us_per_call,derived")
     all_rows = {}
     for name, mod in benches:

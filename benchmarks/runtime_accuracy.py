@@ -7,15 +7,16 @@ clocks, no JAX) and we report the relative iteration-time disagreement of
 each analytic level against the executed ground truth.
 
 Also measures the *host* wall-clock of numeric execution (real JAX fwd/bwd
-through the store) with the per-shape jitted stage cache on vs the seed's
-eager per-micro-batch ``jax.vjp`` retracing — the ``walltime`` rows.
+through the store) across three backward modes — the seed's eager
+per-micro-batch ``jax.vjp`` retracing, the jitted recompute-in-backward
+variant, and the default jitted path that caches VJP residuals between
+forward and backward — the ``walltime`` rows.
 
     PYTHONPATH=src python -m benchmarks.runtime_accuracy [--fast]
 """
 from __future__ import annotations
 
 import dataclasses
-import sys
 import time
 
 import numpy as np
@@ -33,7 +34,11 @@ PLATFORMS = [AWS_LAMBDA, ALIBABA_FC]
 
 
 def _walltime_rows(fast: bool):
-    """Host seconds per numeric engine step, jitted stage cache vs eager vjp."""
+    """Host seconds per numeric engine step across the three backward modes:
+    eager per-micro-batch ``jax.vjp`` (the seed), jitted with forward
+    recompute inside the VJP (``remat``), and the default jitted path that
+    caches the VJP residuals between forward and backward (``resid``) — the
+    last two isolate the wall-clock delta of not re-running the forward."""
     import jax
 
     import repro.configs as configs
@@ -56,20 +61,26 @@ def _walltime_rows(fast: bool):
     batches = [make_batch(cfg, shape, step=k) for k in range(steps)]
     out = []
     times = {}
-    for jit in (False, True):
+    modes = [("eager", dict(jit=False)),
+             ("jit-remat", dict(jit=True, remat=True)),
+             ("jit-resid", dict(jit=True, remat=False))]
+    for mode, kw in modes:
         exe = Execution(cfg=cfg, optimizer=AdamW(lr=1e-3), init_params=params0,
-                        batch_fn=lambda k: batches[k], jit=jit)
+                        batch_fn=lambda k: batches[k], **kw)
         t0 = time.time()
         run_plan(prof, AWS_LAMBDA, config, total_micro_batches=d * mu,
                  steps=steps, execution=exe)
         per_step = (time.time() - t0) / steps
-        times[jit] = per_step
+        times[mode] = per_step
         out.append({"bench": "runtime_accuracy", "model": "walltime",
-                    "platform": "host", "jit": jit, "steps": steps,
+                    "platform": "host", "mode": mode, "steps": steps,
                     "sec_per_step": round(per_step, 3)})
-    out.append({"bench": "runtime_accuracy", "model": "walltime",
-                "platform": "host", "jit": "speedup",
-                "sec_per_step": round(times[False] / max(times[True], 1e-9), 2)})
+    for label, num, den in [("jit_speedup", "eager", "jit-resid"),
+                            ("resid_speedup", "jit-remat", "jit-resid")]:
+        out.append({"bench": "runtime_accuracy", "model": "walltime",
+                    "platform": "host", "mode": label,
+                    "sec_per_step": round(
+                        times[num] / max(times[den], 1e-9), 2)})
     return out
 
 
@@ -134,10 +145,16 @@ def main(fast: bool = False):
     mx = next(r for r in rs if r["model"] == "MAX")
     print(f"\nmax relative error vs executed engine: "
           f"simulator={mx['sim_rel_err']:.2%} perfmodel={mx['model_rel_err']:.2%}")
-    wt = next(r for r in rs if r.get("jit") == "speedup")
-    print(f"numeric engine wall-clock: {wt['sec_per_step']}x faster with the "
-          f"jitted stage cache")
+    jt = next(r for r in rs if r.get("mode") == "jit_speedup")
+    rd = next(r for r in rs if r.get("mode") == "resid_speedup")
+    print(f"numeric engine wall-clock: {jt['sec_per_step']}x faster than "
+          f"eager vjp; residual caching {rd['sec_per_step']}x faster than "
+          f"recompute-in-bwd")
 
 
 if __name__ == "__main__":
-    main("--fast" in sys.argv)
+    import argparse
+
+    ap = argparse.ArgumentParser(description="engine vs sim vs model accuracy")
+    ap.add_argument("--fast", action="store_true")
+    main(ap.parse_args().fast)

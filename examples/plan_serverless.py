@@ -7,63 +7,33 @@ compare with the baseline algorithms.
 model ∈ paper models (bert-large, amoebanet-d18/36, resnet101) or any
 assigned arch id (planned via the ArchConfig bridge).
 
-The solver runs the batched engine (``perfmodel.evaluate_batch``), so
-planning at merge_to=12 — beyond what the paper's minute-scale MIQP budget
-allowed — is sub-second here; pass a third argument to go deeper still.
+This is a thin wrapper over the unified CLI — the same run is
+
+    PYTHONPATH=src python -m repro sweep --model bert-large --batch 64 --merge-to 12
+
+and the library front door is ``repro.api.session(...).sweep()``; add
+``--save-dir`` to keep every swept DeploymentPlan as replayable JSON.
 """
-import sys
+import argparse
 
-from repro.configs import ARCH_IDS, get_config
-from repro.core import planner
-from repro.core.partition import stages_of
-from repro.core.profiler import arch_model_profile, paper_model_profile
-from repro.serverless.frameworks import ALPHA_PAIRS
-from repro.serverless.platform import AWS_LAMBDA, GB
-from repro.serverless.simulator import simulate_funcpipe
+from repro.cli import main as cli_main
 
 
-def main():
-    model = sys.argv[1] if len(sys.argv) > 1 else "bert-large"
-    gb = int(sys.argv[2]) if len(sys.argv) > 2 else 64
-    merge_to = int(sys.argv[3]) if len(sys.argv) > 3 else 12
-    if model in ARCH_IDS:
-        prof = arch_model_profile(get_config(model), AWS_LAMBDA)
-    else:
-        prof = paper_model_profile(model, AWS_LAMBDA)
-    M = gb // 4
-    print(f"model={model} params={prof.param_bytes/2**20:.0f}MB layers={prof.L} "
-          f"global_batch={gb} micro_batches={M} merge_to={merge_to}")
-    results = []
-    for alpha in ALPHA_PAIRS:
-        r = planner.solve(prof, AWS_LAMBDA, alpha=alpha, total_micro_batches=M,
-                          merge_to=merge_to)
-        if r is None:
-            print(f"alpha={alpha}: infeasible")
-            continue
-        results.append(r)
-        sim = simulate_funcpipe(r.profile, AWS_LAMBDA, r.config, M)
-        st = stages_of(r.config.x)
-        mems = [AWS_LAMBDA.memory_options[r.config.z[lo]] // (1024**2) for lo, _ in st]
-        print(f"alpha2={alpha[1]:.2e}: stages={len(st)} d={r.config.d} "
-              f"mem={mems}MB t_iter={sim.t_iter:.2f}s cost=${sim.cost:.5f} "
-              f"(model predicts {r.evaluation.t_iter:.2f}s; solve {r.solve_seconds:.1f}s)")
-    if not results:
-        print("no feasible FuncPipe config for this model/batch on this "
-              "platform (try a smaller batch or the alibaba platform)")
-        return
-    rec = planner.recommend(results)
-    print(f"\nRECOMMENDED: d={rec.config.d}, {sum(rec.config.x)+1} stages, "
-          f"t={rec.evaluation.t_iter:.2f}s, ${rec.evaluation.c_iter:.5f}/iter")
-
-    print("\nbaseline algorithms (same objective, alpha2=2^19e-9):")
-    kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=M, merge_to=8)
-    for name, fn in [("tpdmp", planner.tpdmp_solve),
-                     ("bayes", lambda *a, **k: planner.bayes_solve(*a, rounds=100, **k))]:
-        r = fn(prof, AWS_LAMBDA, **kw)
-        if r:
-            print(f"  {name}: t={r.evaluation.t_iter:.2f}s ${r.evaluation.c_iter:.5f} "
-                  f"obj={r.objective:.5f}")
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("model", nargs="?", default="bert-large")
+    ap.add_argument("global_batch", nargs="?", type=int, default=64)
+    ap.add_argument("merge_to", nargs="?", type=int, default=12)
+    ap.add_argument("--save-dir", default=None,
+                    help="save the swept DeploymentPlan JSONs here")
+    args = ap.parse_args(argv)
+    cli_argv = ["sweep", "--model", args.model,
+                "--batch", str(args.global_batch),
+                "--merge-to", str(args.merge_to)]
+    if args.save_dir:
+        cli_argv += ["--save-dir", args.save_dir]
+    return cli_main(cli_argv)
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

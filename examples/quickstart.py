@@ -10,7 +10,7 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
-import sys
+import argparse
 import time
 
 import jax
@@ -26,9 +26,12 @@ from repro.optim import AdamW
 from repro.train.train_step import init_opt_state, make_train_step
 
 
-def main():
-    arch = sys.argv[1] if len(sys.argv) > 1 else "phi3-mini-3.8b"
-    steps = int(sys.argv[2]) if len(sys.argv) > 2 else 10
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("arch", nargs="?", default="phi3-mini-3.8b")
+    ap.add_argument("steps", nargs="?", type=int, default=10)
+    args = ap.parse_args(argv)
+    arch, steps = args.arch, args.steps
     import dataclasses
     cfg = dataclasses.replace(get_config(arch).reduced(), stages=4, tensor=1,
                               n_layers=4)

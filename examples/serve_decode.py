@@ -3,7 +3,7 @@ arch (single device).  Prints per-token latency and throughput.
 
     PYTHONPATH=src python examples/serve_decode.py [arch] [batch] [new_tokens]
 """
-import sys
+import argparse
 import time
 
 import jax
@@ -13,10 +13,13 @@ from repro.configs import get_config
 from repro.models import registry
 
 
-def main():
-    arch = sys.argv[1] if len(sys.argv) > 1 else "gemma3-4b"
-    B = int(sys.argv[2]) if len(sys.argv) > 2 else 8
-    n_new = int(sys.argv[3]) if len(sys.argv) > 3 else 32
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("arch", nargs="?", default="gemma3-4b")
+    ap.add_argument("batch", nargs="?", type=int, default=8)
+    ap.add_argument("new_tokens", nargs="?", type=int, default=32)
+    args = ap.parse_args(argv)
+    arch, B, n_new = args.arch, args.batch, args.new_tokens
     cfg = get_config(arch).reduced()
     assert not cfg.is_encoder, "encoder archs have no decode path"
     S_pre, s_ctx = 64, 64 + n_new

@@ -1,0 +1,304 @@
+"""The serializable deployment artifact of the paper's workflow ①-⑤.
+
+A :class:`DeploymentPlan` freezes one co-optimization decision — model,
+platform, partition ``x``, per-layer memory ``z``, DP degree ``d``, the
+micro-batch budget, the objective weights and the solver's predicted
+time/cost — together with a fingerprint of the (merged) layer profile the
+decision indexes into.  It round-trips through JSON (``to_json`` /
+``from_json``), has a stable content hash, and is accepted directly by the
+analytic simulator (``simulate_funcpipe``), the storage-backed engine
+(``runtime.run_plan``) and the framework baselines: plan once, save the
+JSON, simulate or emulate later — bit-identically.
+
+Replaying rebuilds the profile through ``profiler.resolve_profile`` with the
+recorded ``(model, seq, micro_batch, merge_to)`` and verifies it against the
+stored fingerprint; a mismatch (profiler drift, edited JSON, wrong platform)
+raises :class:`PlanCompatibilityError` instead of silently mis-executing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.partition import ModelProfile, merge_layers, stages_of
+from repro.core.perfmodel import Config, Evaluation, evaluate
+from repro.serverless.platform import MB, Platform, get_platform
+
+SCHEMA_VERSION = 1
+
+
+class PlanCompatibilityError(RuntimeError):
+    """A DeploymentPlan does not match the profile/platform it is replayed
+    against (stale profiler, edited JSON, wrong platform or merge depth)."""
+
+
+def profile_fingerprint(profile: ModelProfile,
+                        platform: Optional[Platform] = None) -> str:
+    """Stable 16-hex digest of a layer profile's quantitative content.
+
+    With ``platform`` given, the platform's own parameters (pricing,
+    bandwidth curve, storage latency/caps, contention beta) are folded in —
+    the compute tables embed some platform behavior but not the cost and
+    communication constants, and a plan replayed after those drift would
+    otherwise pass the guard and silently report different numbers."""
+    arr = profile.arrays()
+    h = hashlib.sha256()
+    h.update(f"{profile.name}:{profile.L}".encode())
+    for key in ("s", "a", "o", "g", "Tf", "Tb"):
+        h.update(key.encode())
+        h.update(np.ascontiguousarray(arr[key], dtype=np.float64).tobytes())
+    if platform is not None:
+        h.update(json.dumps(dataclasses.asdict(platform),
+                            sort_keys=True).encode())
+    return h.hexdigest()[:16]
+
+
+@dataclass(frozen=True)
+class ResolvedPlan:
+    """A DeploymentPlan bound back to live objects, ready to execute."""
+
+    profile: ModelProfile         # merged profile the config indexes into
+    platform: Platform
+    config: Config
+    total_micro_batches: int
+    pipelined_sync: bool
+
+
+@dataclass(frozen=True)
+class DeploymentPlan:
+    """One deployable FuncPipe configuration, serializable and replayable."""
+
+    model: str                    # profiler-resolvable model id
+    platform: str                 # Platform.name (see platform.get_platform)
+    x: Tuple[int, ...]            # partition boundary bits, len L-1
+    z: Tuple[int, ...]            # per-layer memory option index, len L
+    d: int                        # data-parallel degree
+    total_micro_batches: int      # M (= global_batch / micro_batch)
+    alpha: Tuple[float, float]    # objective weights (a1 cost, a2 time)
+    pipelined_sync: bool          # eq (2) collective vs eq (1)
+    merge_to: Optional[int]       # layer-merge depth (None = unmerged)
+    seq: Optional[int]            # profile arg (arch models; None = default)
+    micro_batch: Optional[int]    # profile arg (None = family default)
+    profile_fingerprint: str      # fingerprint of the MERGED profile
+    t_iter: float                 # solver-predicted iteration time (s)
+    c_iter: float                 # solver-predicted cost ($ / iteration)
+    objective: float              # a1 * c_iter + a2 * t_iter
+    solver: str                   # cd | exhaustive | tpdmp | bayes | manual
+    engine: str                   # batch | scalar | -
+    solve_seconds: float          # provenance only; excluded from the hash
+    version: int = SCHEMA_VERSION
+
+    # ------------------------------------------------------------ properties
+    @property
+    def config(self) -> Config:
+        return Config(x=self.x, d=self.d, z=self.z)
+
+    @property
+    def n_stages(self) -> int:
+        return sum(self.x) + 1
+
+    @property
+    def n_workers(self) -> int:
+        return self.n_stages * self.d
+
+    @property
+    def content_hash(self) -> str:
+        """Stable digest of the plan's *content* (identical decisions hash
+        identically; ``solve_seconds`` is provenance and excluded)."""
+        d = self._as_dict()
+        d.pop("solve_seconds")
+        blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+    # ---------------------------------------------------------- construction
+    @classmethod
+    def from_result(cls, result, *, platform: Platform,
+                    alpha: Tuple[float, float], total_micro_batches: int,
+                    model: Optional[str] = None, pipelined_sync: bool = True,
+                    solver: str = "cd", engine: str = "batch",
+                    merge_to: Optional[int] = None, seq: Optional[int] = None,
+                    micro_batch: Optional[int] = None) -> "DeploymentPlan":
+        """Freeze a ``planner.PlanResult`` (any solver path) into a plan."""
+        cfg, ev = result.config, result.evaluation
+        return cls(
+            model=model if model is not None else result.profile.name,
+            platform=platform.name,
+            x=tuple(int(v) for v in cfg.x), z=tuple(int(v) for v in cfg.z),
+            d=int(cfg.d), total_micro_batches=int(total_micro_batches),
+            alpha=(float(alpha[0]), float(alpha[1])),
+            pipelined_sync=bool(pipelined_sync), merge_to=merge_to,
+            seq=seq, micro_batch=micro_batch,
+            profile_fingerprint=profile_fingerprint(result.profile, platform),
+            t_iter=float(ev.t_iter), c_iter=float(ev.c_iter),
+            objective=float(result.objective), solver=solver, engine=engine,
+            solve_seconds=float(result.solve_seconds),
+        )
+
+    @classmethod
+    def from_config(cls, profile: ModelProfile, platform: Platform,
+                    config: Config, total_micro_batches: int, *,
+                    model: Optional[str] = None, pipelined_sync: bool = True,
+                    merge_to: Optional[int] = None, seq: Optional[int] = None,
+                    micro_batch: Optional[int] = None,
+                    solver: str = "manual") -> "DeploymentPlan":
+        """Freeze a hand-built configuration (e.g. the numeric-emulation
+        partition); predictions come from the closed-form model."""
+        ev: Evaluation = evaluate(profile, platform, config,
+                                  total_micro_batches,
+                                  pipelined_sync=pipelined_sync)
+        return cls(
+            model=model if model is not None else profile.name,
+            platform=platform.name,
+            x=tuple(int(v) for v in config.x),
+            z=tuple(int(v) for v in config.z), d=int(config.d),
+            total_micro_batches=int(total_micro_batches),
+            alpha=(1.0, 0.0), pipelined_sync=bool(pipelined_sync),
+            merge_to=merge_to, seq=seq, micro_batch=micro_batch,
+            profile_fingerprint=profile_fingerprint(profile, platform),
+            t_iter=float(ev.t_iter), c_iter=float(ev.c_iter),
+            objective=float(ev.c_iter), solver=solver, engine="-",
+            solve_seconds=0.0,
+        )
+
+    # --------------------------------------------------------- serialization
+    def _as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["x"], d["z"] = list(self.x), list(self.z)
+        d["alpha"] = list(self.alpha)
+        return d
+
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        return json.dumps(self._as_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "DeploymentPlan":
+        d = json.loads(blob)
+        version = d.get("version", 0)
+        if version != SCHEMA_VERSION:
+            raise PlanCompatibilityError(
+                f"plan schema version {version} != supported {SCHEMA_VERSION}")
+        names = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - names
+        if unknown:
+            raise PlanCompatibilityError(
+                f"plan JSON has unknown fields {sorted(unknown)}")
+        missing = names - set(d)
+        if missing:
+            raise PlanCompatibilityError(
+                f"plan JSON is missing fields {sorted(missing)}")
+        d["x"] = tuple(int(v) for v in d["x"])
+        d["z"] = tuple(int(v) for v in d["z"])
+        d["alpha"] = tuple(float(v) for v in d["alpha"])
+        return cls(**d)
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "DeploymentPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -------------------------------------------------------------- resolve
+    def resolve(self, *, profile: Optional[ModelProfile] = None,
+                platform: Optional[Platform] = None,
+                check: bool = True) -> ResolvedPlan:
+        """Bind the plan back to live objects, verifying compatibility.
+
+        ``profile`` (already merged) and ``platform`` override the recorded
+        identifiers — the profile is still fingerprint-checked, so passing a
+        freshly built profile that drifted from the one the plan was solved
+        against raises :class:`PlanCompatibilityError`.
+        """
+        from repro.core.profiler import resolve_profile
+
+        if platform is None:
+            try:
+                platform = get_platform(self.platform)
+            except KeyError as e:
+                raise PlanCompatibilityError(str(e)) from None
+        if profile is None:
+            try:
+                full = resolve_profile(self.model, platform, seq=self.seq,
+                                       micro_batch=self.micro_batch)
+            except KeyError as e:
+                raise PlanCompatibilityError(str(e)) from None
+            profile = (merge_layers(full, self.merge_to)
+                       if self.merge_to is not None else full)
+        if check:
+            got = profile_fingerprint(profile, platform)
+            if got != self.profile_fingerprint:
+                raise PlanCompatibilityError(
+                    f"profile/platform fingerprint mismatch for model "
+                    f"{self.model!r} on {platform.name}: plan was solved "
+                    f"against {self.profile_fingerprint}, freshly built "
+                    f"state is {got} (L={profile.L}, "
+                    f"merge_to={self.merge_to}).  The profiler or platform "
+                    "model changed since the plan was saved — re-plan, or "
+                    "pass the original profile explicitly.")
+        L = profile.L
+        if len(self.x) != L - 1 or len(self.z) != L:
+            raise PlanCompatibilityError(
+                f"plan indexes {len(self.z)} layers but profile "
+                f"{profile.name!r} has {L}")
+        J = len(platform.memory_options)
+        if any(not 0 <= j < J for j in self.z):
+            raise PlanCompatibilityError(
+                f"plan memory indices {self.z} out of range for platform "
+                f"{platform.name!r} with {J} memory options")
+        return ResolvedPlan(profile=profile, platform=platform,
+                            config=self.config,
+                            total_micro_batches=self.total_micro_batches,
+                            pipelined_sync=self.pipelined_sync)
+
+    # ------------------------------------------------------------- execution
+    def evaluate(self, **resolve_kw) -> Evaluation:
+        """Closed-form performance model prediction (eq 6/7)."""
+        rp = self.resolve(**resolve_kw)
+        return evaluate(rp.profile, rp.platform, rp.config,
+                        rp.total_micro_batches,
+                        pipelined_sync=rp.pipelined_sync)
+
+    def simulate(self, *, contention: bool = False, **resolve_kw):
+        """Replay through the analytic discrete-event simulator."""
+        from repro.serverless.simulator import simulate_funcpipe
+
+        rp = self.resolve(**resolve_kw)
+        return simulate_funcpipe(rp.profile, rp.platform, rp.config,
+                                 rp.total_micro_batches,
+                                 pipelined_sync=rp.pipelined_sync,
+                                 contention=contention)
+
+    def emulate(self, *, steps: int = 1, contention: bool = False,
+                execution=None, **resolve_kw):
+        """Replay through the storage-backed execution engine."""
+        from repro.serverless.runtime import run_plan
+
+        rp = self.resolve(**resolve_kw)
+        return run_plan(rp.profile, rp.platform, rp.config,
+                        rp.total_micro_batches, steps=steps,
+                        pipelined_sync=rp.pipelined_sync,
+                        contention=contention, execution=execution)
+
+    # ------------------------------------------------------------ describing
+    def describe(self) -> str:
+        try:
+            platform = get_platform(self.platform)
+        except KeyError as e:
+            raise PlanCompatibilityError(str(e)) from None
+        st = stages_of(self.x)
+        mems = [platform.memory_options[self.z[lo]] // MB for lo, _ in st]
+        mu = max(1, self.total_micro_batches // self.d)
+        return (f"{self.model} on {self.platform}: {len(st)} stages x "
+                f"d={self.d} ({self.n_workers} workers), mem={mems}MB, "
+                f"M={self.total_micro_batches} (mu={mu}/worker), "
+                f"sync={'eq(2)' if self.pipelined_sync else 'eq(1)'}, "
+                f"predicted t_iter={self.t_iter:.3f}s "
+                f"cost=${self.c_iter:.6f}/iter "
+                f"[{self.solver}/{self.engine}, hash {self.content_hash}]")

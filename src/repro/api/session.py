@@ -1,0 +1,205 @@
+"""Fluent front door over the paper's workflow ①-⑤.
+
+    from repro.api import session
+    s = (session("bert-large", platform="aws", global_batch=64)
+         .profile()
+         .plan(merge_to=14)
+         .simulate()
+         .emulate(steps=2))
+    s.deployment_plan.save("plan.json")
+    print(s.sim_result.t_iter, s.engine_result.t_iter)
+
+Each step stores its artifact on the session and returns ``self``; later
+steps trigger earlier ones automatically (``plan`` profiles, ``simulate``
+plans).  ``save_plan``/``load_plan`` persist the decision as a
+:class:`DeploymentPlan` — loading fingerprint-checks the plan against this
+session's freshly built profile.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple, Union
+
+from repro.api.plan import DeploymentPlan
+from repro.core import planner
+from repro.core.partition import ModelProfile, merge_layers
+from repro.core.profiler import resolve_profile
+from repro.serverless.platform import Platform, get_platform
+
+# the paper's §5.1 default weight pair (alpha2 = 2^16 * 1e-9)
+DEFAULT_ALPHA: Tuple[float, float] = (1.0, 2**16 * 1e-9)
+
+
+class InfeasiblePlanError(RuntimeError):
+    """The solver found no feasible (partition, memory, d) for the budget —
+    typed so callers can distinguish infeasibility from real failures."""
+
+
+class Session:
+    """Mutable builder: model + platform + batch budget -> plan -> replay."""
+
+    def __init__(self, model: str, platform: Union[str, Platform] = "aws", *,
+                 global_batch: int = 64, micro_batch: Optional[int] = None,
+                 seq: Optional[int] = None, pipelined_sync: bool = True,
+                 contention: bool = False):
+        self.model = model
+        self.platform = (get_platform(platform)
+                         if isinstance(platform, str) else platform)
+        self.global_batch = global_batch
+        # micro_batch=None means "unspecified": 4 for the M budget (the
+        # paper's default micro-batch) and each profile family's own default
+        # when profiling; an explicit value — even 4 — is honored and
+        # recorded in the plan verbatim
+        self.micro_batch = 4 if micro_batch is None else micro_batch
+        self._profile_mb: Optional[int] = micro_batch
+        self.seq = seq
+        self.pipelined_sync = pipelined_sync
+        self.contention = contention
+
+        self.model_profile: Optional[ModelProfile] = None
+        self.deployment_plan: Optional[DeploymentPlan] = None
+        self.plan_result: Optional[planner.PlanResult] = None  # in-memory twin
+        self.plans: List[DeploymentPlan] = []       # sweep results
+        self.plan_results: List[planner.PlanResult] = []
+        self.recommended: Optional[int] = None      # index into .plans
+        self.evaluation = None                      # perfmodel Evaluation
+        self.sim_result = None                      # simulator SimResult
+        self.engine_result = None                   # runtime EngineResult
+
+    @property
+    def total_micro_batches(self) -> int:
+        return max(1, self.global_batch // self.micro_batch)
+
+    # ------------------------------------------------------------ workflow ①
+    def profile(self) -> "Session":
+        """Build the layer profile (paper Fig 2 component ③)."""
+        self.model_profile = resolve_profile(
+            self.model, self.platform, seq=self.seq,
+            micro_batch=self._profile_mb)
+        return self
+
+    def _require_profile(self) -> ModelProfile:
+        if self.model_profile is None:
+            self.profile()
+        return self.model_profile
+
+    # ------------------------------------------------------------ workflow ②
+    def plan(self, *, alpha: Tuple[float, float] = DEFAULT_ALPHA,
+             merge_to: int = planner.DEFAULT_MERGE_TO,
+             solver: str = "cd", engine: str = "batch",
+             d_options: Sequence[int] = planner.DEFAULT_D_OPTIONS,
+             max_stages: Optional[int] = None, rounds: int = 100,
+             seed: int = 0) -> "Session":
+        """Co-optimize partition + resources; freeze a DeploymentPlan.
+
+        ``solver``: ``cd`` / ``exhaustive`` (the MIQP-style co-optimizer),
+        ``tpdmp`` or ``bayes`` (the §5.6 comparison algorithms).
+        """
+        prof = self._require_profile()
+        M = self.total_micro_batches
+        common = dict(alpha=alpha, total_micro_batches=M, merge_to=merge_to,
+                      d_options=d_options, pipelined_sync=self.pipelined_sync)
+        if solver in ("cd", "exhaustive"):
+            r = planner.solve(prof, self.platform, method=solver,
+                              engine=engine, max_stages=max_stages, **common)
+        elif solver == "tpdmp":
+            r = planner.tpdmp_solve(prof, self.platform, engine=engine,
+                                    **common)
+        elif solver == "bayes":
+            r = planner.bayes_solve(prof, self.platform, rounds=rounds,
+                                    seed=seed, **common)
+            engine = "batch"
+        else:
+            raise ValueError(f"unknown solver {solver!r}")
+        if r is None:
+            raise InfeasiblePlanError(
+                f"no feasible plan for {self.model} on {self.platform.name} "
+                f"at M={M} (try a smaller batch or another platform)")
+        self.plan_result = r
+        self.deployment_plan = DeploymentPlan.from_result(
+            r, model=self.model, platform=self.platform, alpha=alpha,
+            total_micro_batches=M, pipelined_sync=self.pipelined_sync,
+            solver=solver, engine=engine, merge_to=merge_to, seq=self.seq,
+            micro_batch=self._profile_mb)
+        return self
+
+    def sweep(self, *, alphas: Optional[Sequence[Tuple[float, float]]] = None,
+              **plan_kw) -> "Session":
+        """Plan across the paper's objective-weight pairs; pick the §5.1
+        recommendation (fastest plan with speedup/cost ratio >= 0.8)."""
+        from repro.serverless.frameworks import ALPHA_PAIRS
+
+        self._require_profile()
+        self.plans, self.plan_results = [], []
+        for alpha in (ALPHA_PAIRS if alphas is None else alphas):
+            try:
+                self.plan(alpha=alpha, **plan_kw)
+            except InfeasiblePlanError:
+                continue
+            if self.deployment_plan.config not in [p.config for p in self.plans]:
+                self.plans.append(self.deployment_plan)
+                self.plan_results.append(self.plan_result)
+        if not self.plans:
+            raise InfeasiblePlanError(
+                f"no feasible plan for {self.model} on {self.platform.name} "
+                "at any objective weight")
+        rec = planner.recommend(self.plan_results)
+        self.recommended = self.plan_results.index(rec)
+        self.deployment_plan = self.plans[self.recommended]
+        self.plan_result = self.plan_results[self.recommended]
+        return self
+
+    # ----------------------------------------------------------- replay paths
+    def _require_plan(self) -> DeploymentPlan:
+        if self.deployment_plan is None:
+            self.plan()
+        return self.deployment_plan
+
+    def evaluate(self) -> "Session":
+        """Closed-form model prediction for the current plan."""
+        self.evaluation = self._require_plan().evaluate(
+            profile=self._merged_profile(), platform=self.platform)
+        return self
+
+    def simulate(self) -> "Session":
+        """Replay the plan through the analytic discrete-event simulator."""
+        self.sim_result = self._require_plan().simulate(
+            contention=self.contention, profile=self._merged_profile(),
+            platform=self.platform)
+        return self
+
+    def emulate(self, *, steps: int = 1, execution=None) -> "Session":
+        """Execute the plan through the storage-backed runtime engine."""
+        self.engine_result = self._require_plan().emulate(
+            steps=steps, contention=self.contention, execution=execution,
+            profile=self._merged_profile(), platform=self.platform)
+        return self
+
+    def _merged_profile(self) -> ModelProfile:
+        plan = self.deployment_plan
+        prof = self._require_profile()
+        if plan.merge_to is not None:
+            prof = merge_layers(prof, plan.merge_to)
+        return prof
+
+    # ------------------------------------------------------------ persistence
+    def save_plan(self, path) -> "Session":
+        self._require_plan().save(path)
+        return self
+
+    def load_plan(self, path) -> "Session":
+        """Load a saved plan and fingerprint-check it against this session's
+        freshly built profile (raises PlanCompatibilityError on drift)."""
+        plan = DeploymentPlan.load(path)
+        prof = self._require_profile()
+        if plan.merge_to is not None:
+            prof = merge_layers(prof, plan.merge_to)
+        plan.resolve(profile=prof, platform=self.platform)  # raises on drift
+        self.deployment_plan = plan
+        self.plan_result = None
+        return self
+
+
+def session(model: str, platform: Union[str, Platform] = "aws",
+            **kw) -> Session:
+    """Entry point: ``repro.api.session("bert-large", platform="aws")``."""
+    return Session(model, platform, **kw)

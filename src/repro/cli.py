@@ -1,0 +1,495 @@
+"""``python -m repro`` — the single command-line front door.
+
+    plan      profile a model + co-optimize -> print/save a DeploymentPlan
+    simulate  replay a plan through the analytic discrete-event simulator
+    emulate   execute a plan through the storage-backed runtime engine
+    sweep     the paper's workflow ①-⑤: Pareto frontier + recommendation +
+              the §5.6 baseline algorithms (old examples/plan_serverless.py)
+    bench     run the paper-table benchmark modules (benchmarks/run.py)
+    train     mesh/TPU training driver (delegates to repro.launch.train)
+    dryrun    mesh compile-only sweep (delegates to repro.launch.dryrun)
+
+Every subcommand that plans accepts ``--fast`` (small merge depth, reduced
+DP grid) so CI can smoke the whole surface in seconds.  ``plan -o plan.json``
+then ``simulate plan.json`` / ``emulate plan.json`` replays the saved
+artifact bit-identically (fingerprint-checked; see ``repro.api``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from contextlib import contextmanager
+from typing import List, Optional
+
+from repro.serverless.platform import MB, get_platform
+
+
+@contextmanager
+def _operator_errors():
+    """Model/platform lookups raise KeyError with a helpful message; at the
+    CLI that is an operator typo, not a bug — exit cleanly like the old
+    per-driver mains did.  Scoped to the lookup call sites so unrelated
+    KeyErrors keep their tracebacks."""
+    try:
+        yield
+    except KeyError as e:
+        raise SystemExit(
+            f"error: {e.args[0] if e.args else e}") from None
+
+_PLATFORM_CHOICES = ("aws", "alibaba")
+_FAST = dict(merge_to=6, d_options=(1, 2, 4))
+
+
+def _add_model_args(p: argparse.ArgumentParser, *, model_default=None):
+    p.add_argument("--model", default=model_default,
+                   help="paper model (bert-large, resnet101, amoebanet-d18/36)"
+                        " or assigned arch id")
+    p.add_argument("--platform", default="aws", choices=_PLATFORM_CHOICES)
+    p.add_argument("--batch", type=int, default=None,
+                   help="global batch size (default 64)")
+    p.add_argument("--micro-batch", type=int, default=None,
+                   help="micro-batch size (default 4; explicit values are "
+                        "also used when profiling arch models)")
+    p.add_argument("--seq", type=int, default=None,
+                   help="profiling sequence length (arch models)")
+    p.add_argument("--lambda-ml-sync", action="store_true",
+                   help="use the 3-phase eq (1) collective instead of eq (2)")
+    p.add_argument("--contention", action="store_true",
+                   help="model §5.4 bandwidth contention")
+
+
+def _add_solver_args(p: argparse.ArgumentParser):
+    p.add_argument("--merge-to", type=int, default=None,
+                   help="layer-merge depth (default: planner default)")
+    p.add_argument("--alpha2", type=float, default=None,
+                   help="time weight a2 in the objective a1*c + a2*t "
+                        "(a1=1; default 2^16 * 1e-9)")
+    p.add_argument("--solver", default="cd",
+                   choices=("cd", "exhaustive", "tpdmp", "bayes"))
+    p.add_argument("--engine", default="batch", choices=("batch", "scalar"))
+    p.add_argument("--max-stages", type=int, default=None)
+    p.add_argument("--fast", action="store_true",
+                   help="CI-sized search (merge_to=6, d in {1,2,4})")
+
+
+def _make_session(args, **kw):
+    from repro.api import session
+
+    return session(args.model, platform=args.platform,
+                   global_batch=64 if args.batch is None else args.batch,
+                   micro_batch=args.micro_batch,
+                   seq=args.seq, pipelined_sync=not args.lambda_ml_sync,
+                   contention=getattr(args, "contention", False), **kw)
+
+
+def _plan_kw(args) -> dict:
+    from repro.core import planner
+
+    alpha2 = 2**16 * 1e-9 if args.alpha2 is None else args.alpha2
+    kw = dict(alpha=(1.0, alpha2), solver=args.solver,
+              engine=args.engine)
+    if args.solver in ("cd", "exhaustive") and args.max_stages is not None:
+        kw["max_stages"] = args.max_stages
+    kw["merge_to"] = args.merge_to if args.merge_to is not None \
+        else (_FAST["merge_to"] if args.fast else planner.DEFAULT_MERGE_TO)
+    if args.fast:
+        kw["d_options"] = _FAST["d_options"]
+    return kw
+
+
+def _load_or_plan(args):
+    """Shared simulate/emulate input: a saved plan file or --model flags."""
+    from repro.api import DeploymentPlan
+
+    if args.plan_file:
+        # flags that would contradict what the plan file records must not be
+        # silently ignored — a replay always uses the recorded decisions
+        conflicting = [name for name, passed in [
+            ("--model", args.model),
+            ("--lambda-ml-sync", args.lambda_ml_sync),
+            ("--batch", args.batch is not None),
+            ("--alpha2", args.alpha2 is not None),
+            ("--merge-to", args.merge_to is not None),
+            ("--seq", args.seq is not None),
+            ("--micro-batch", args.micro_batch is not None),
+            ("--solver", args.solver != "cd"),
+            ("--engine", args.engine != "batch"),
+            ("--max-stages", args.max_stages is not None),
+            ("--fast", args.fast),
+        ] if passed]
+        if conflicting:
+            raise SystemExit(
+                f"{', '.join(conflicting)} conflict with replaying "
+                f"{args.plan_file}: a saved plan replays exactly as "
+                "recorded.  Drop the flags (or drop the file to plan fresh).")
+        try:
+            return DeploymentPlan.load(args.plan_file)
+        except FileNotFoundError:
+            raise SystemExit(f"error: no such plan file: {args.plan_file}")
+    if not args.model:
+        raise SystemExit("pass a saved plan.json or --model")
+    with _operator_errors():        # unknown model/platform lookups only
+        s = _make_session(args).profile()
+    return s.plan(**_plan_kw(args)).deployment_plan
+
+
+# ------------------------------------------------------------------- plan
+def _cmd_plan(args) -> int:
+    if not args.model:
+        raise SystemExit("--model is required")
+    with _operator_errors():        # unknown model/platform lookups only
+        s = _make_session(args).profile()
+    plan = s.plan(**_plan_kw(args)).deployment_plan
+    print(plan.describe())
+    print(f"solve: {plan.solve_seconds:.2f}s "
+          f"(alpha={plan.alpha[0]:g},{plan.alpha[1]:.3e}; "
+          f"objective={plan.objective:.6f})")
+    if args.out:
+        plan.save(args.out)
+        print(f"wrote {args.out} (content hash {plan.content_hash})")
+    return 0
+
+
+# --------------------------------------------------------------- simulate
+def _cmd_simulate(args) -> int:
+    from repro.core.perfmodel import evaluate
+    from repro.serverless.simulator import simulate_funcpipe
+
+    plan = _load_or_plan(args)
+    print(plan.describe())
+    rp = plan.resolve()     # one profile rebuild + fingerprint check
+    sim = simulate_funcpipe(rp.profile, rp.platform, rp.config,
+                            rp.total_micro_batches,
+                            pipelined_sync=rp.pipelined_sync,
+                            contention=args.contention)
+    bd = sim.breakdown
+    print(f"simulate: t_iter={sim.t_iter:.3f}s cost=${sim.cost:.6f}/iter "
+          f"mem={sim.total_mem_gb:.1f}GB "
+          f"(compute={bd['compute']:.3f}s pipe_comm={bd['pipeline_comm']:.3f}s "
+          f"sync={bd['sync']:.3f}s)")
+    ev = evaluate(rp.profile, rp.platform, rp.config, rp.total_micro_batches,
+                  pipelined_sync=rp.pipelined_sync)
+    print(f"vs perfmodel: t_iter={ev.t_iter:.3f}s "
+          f"(rel err {abs(sim.t_iter - ev.t_iter) / ev.t_iter:.1%})")
+    return 0
+
+
+# ---------------------------------------------------------------- emulate
+def _numeric_partition(cfg, n_stages: int) -> tuple:
+    """Boundary vector over the arch profile ([embed]+layers+[head]) cutting
+    at period boundaries so every stage owns whole instances."""
+    L = cfg.n_layers + 2
+    plen = cfg.period_len
+    n_inst = cfg.n_periods
+    assert n_stages <= n_inst, (n_stages, n_inst)
+    x = [0] * (L - 1)
+    for s in range(1, n_stages):
+        inst = round(s * n_inst / n_stages)
+        layer = inst * plen               # first layer of stage s
+        x[layer] = 1                      # cut after profile layer `layer`
+    return tuple(x)
+
+
+def _min_feasible_z(profile, platform, x, d, mu):
+    from repro.core import planner
+
+    stage_mem = planner._min_feasible_stage_mem(profile, platform, x, d, mu)
+    if stage_mem is None:
+        raise SystemExit("no memory option fits the per-stage working set")
+    return planner._expand_z(stage_mem, x, profile.L)
+
+
+def _numeric_plan(args):
+    """Numeric-mode setup: period-aligned manual partition + Execution."""
+    import dataclasses
+
+    import jax
+
+    from repro.api import DeploymentPlan
+    from repro.configs import ARCH_IDS, get_config
+    from repro.configs.base import InputShape
+    from repro.core.perfmodel import Config
+    from repro.core.profiler import arch_model_profile
+    from repro.data.synthetic import make_batch
+    from repro.models import registry
+    from repro.optim import AdamW
+    from repro.serverless.runtime import Execution
+
+    platform = get_platform(args.platform)
+    arch = args.model or "phi3-mini-3.8b"
+    if arch not in ARCH_IDS:
+        raise SystemExit(
+            f"--numerics runs real JAX and needs an assigned arch id, got "
+            f"{arch!r}; archs: {sorted(ARCH_IDS)}")
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              n_layers=args.n_layers)
+    seq = args.seq if args.seq is not None else 16
+    batch = 64 if args.batch is None else args.batch
+    shape = InputShape("emulate", seq, batch, "train")
+    mu = max(1, batch // (args.dp * 2))
+    if batch % (args.dp * mu):
+        raise SystemExit(f"--batch {batch} must be divisible by dp*mu "
+                         f"= {args.dp}*{mu}")
+    if args.stages > cfg.n_periods:
+        raise SystemExit(
+            f"--stages {args.stages} exceeds the {cfg.n_periods} period "
+            f"instances of {arch} at --n-layers {args.n_layers}")
+    mb = batch // (args.dp * mu)
+    prof = arch_model_profile(cfg, platform, seq=seq, micro_batch=mb)
+    x = _numeric_partition(cfg, args.stages)
+    z = _min_feasible_z(prof, platform, x, args.dp, mu)
+    plan = DeploymentPlan.from_config(
+        prof, platform, Config(x=x, d=args.dp, z=z), args.dp * mu,
+        model=f"{arch}@reduced{args.n_layers}",   # replayable spelling
+        pipelined_sync=not args.lambda_ml_sync, seq=seq,
+        micro_batch=mb, solver="manual")
+    params0 = registry.init_params(cfg, jax.random.PRNGKey(0))
+    ex = Execution(cfg=cfg, optimizer=AdamW(lr=1e-2), init_params=params0,
+                   batch_fn=lambda k: make_batch(cfg, shape, step=k))
+    return plan, prof, ex
+
+
+def _cmd_emulate(args) -> int:
+    from repro.core.perfmodel import evaluate
+    from repro.serverless.runtime import run_plan
+    from repro.serverless.simulator import simulate_funcpipe
+
+    if args.numerics:
+        if args.plan_file:
+            raise SystemExit(
+                "--numerics builds its own period-aligned plan and cannot "
+                "replay a plan file; drop the file argument (numeric runs "
+                "can SAVE their plan with -o, and that file replays on the "
+                "timing axis via `repro simulate`/`repro emulate` without "
+                "--numerics)")
+        # the numeric partition is manual: solver flags would be silently
+        # ignored, so reject them (mirrors the plan-file conflict check)
+        ignored = [name for name, passed in [
+            ("--merge-to", args.merge_to is not None),
+            ("--alpha2", args.alpha2 is not None),
+            ("--micro-batch", args.micro_batch is not None),
+            ("--solver", args.solver != "cd"),
+            ("--engine", args.engine != "batch"),
+            ("--max-stages", args.max_stages is not None),
+            ("--fast", args.fast),
+        ] if passed]
+        if ignored:
+            raise SystemExit(
+                f"{', '.join(ignored)} have no effect with --numerics "
+                "(the numeric partition comes from --stages/--dp/--batch)")
+        plan, prof, ex = _numeric_plan(args)
+        rp = plan.resolve(profile=prof)
+    else:
+        plan = _load_or_plan(args)
+        rp = plan.resolve()
+        ex = None
+    print(plan.describe())
+    if args.out:
+        plan.save(args.out)
+        print(f"wrote {args.out} (content hash {plan.content_hash})")
+
+    res = run_plan(rp.profile, rp.platform, rp.config,
+                   rp.total_micro_batches, steps=args.steps,
+                   pipelined_sync=rp.pipelined_sync,
+                   contention=args.contention, execution=ex)
+    for k, m in enumerate(res.metrics):
+        print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
+              f"aux={m['aux']:.4f}")
+    bd = res.breakdown
+    print(f"engine: t_iter={res.t_iter:.3f}s cost=${res.cost:.6f}/iter "
+          f"mem={res.total_mem_gb:.1f}GB "
+          f"(compute={bd['compute']:.3f}s pipe_comm={bd['pipeline_comm']:.3f}s "
+          f"sync={bd['sync']:.3f}s)")
+    ss = res.store_stats
+    print(f"store: {ss.puts} puts / {ss.gets} gets, "
+          f"{ss.bytes_in / MB:.0f}MB in / {ss.bytes_out / MB:.0f}MB out, "
+          f"peak {ss.peak_bytes / MB:.0f}MB")
+
+    sim = simulate_funcpipe(rp.profile, rp.platform, rp.config,
+                            rp.total_micro_batches,
+                            pipelined_sync=rp.pipelined_sync,
+                            contention=args.contention)
+    ev = evaluate(rp.profile, rp.platform, rp.config, rp.total_micro_batches,
+                  pipelined_sync=rp.pipelined_sync)
+    for name, t in [("simulator", sim.t_iter), ("perfmodel", ev.t_iter)]:
+        print(f"vs {name}: t_iter={t:.3f}s "
+              f"(rel err {abs(res.t_iter - t) / t:.1%})")
+    return 0
+
+
+# ------------------------------------------------------------------ sweep
+def _cmd_sweep(args) -> int:
+    """Paper workflow ①-⑤ (old examples/plan_serverless.py output format)."""
+    import os
+
+    from repro.api import InfeasiblePlanError
+    from repro.core import planner
+    from repro.core.partition import stages_of
+    from repro.serverless.frameworks import ALPHA_PAIRS
+    from repro.serverless.simulator import simulate_funcpipe
+
+    if not args.model:
+        raise SystemExit("--model is required")
+    platform = get_platform(args.platform)
+    with _operator_errors():
+        s = _make_session(args)
+        prof = s.profile().model_profile
+    M = s.total_micro_batches
+    merge_to = args.merge_to if args.merge_to is not None \
+        else (_FAST["merge_to"] if args.fast else 12)
+    print(f"model={args.model} params={prof.param_bytes/2**20:.0f}MB "
+          f"layers={prof.L} global_batch={s.global_batch} micro_batches={M} "
+          f"merge_to={merge_to}")
+    plan_kw = dict(merge_to=merge_to)
+    if args.fast:
+        plan_kw["d_options"] = _FAST["d_options"]
+    results, saved = [], []
+    for alpha in ALPHA_PAIRS:
+        try:
+            s.plan(alpha=alpha, **plan_kw)
+        except InfeasiblePlanError:
+            print(f"alpha={alpha}: infeasible")
+            continue
+        r, plan = s.plan_result, s.deployment_plan
+        results.append(r)
+        saved.append(plan)
+        sim = simulate_funcpipe(r.profile, platform, r.config, M,
+                                pipelined_sync=s.pipelined_sync,
+                                contention=args.contention)
+        st = stages_of(r.config.x)
+        mems = [platform.memory_options[r.config.z[lo]] // MB for lo, _ in st]
+        print(f"alpha2={alpha[1]:.2e}: stages={len(st)} d={r.config.d} "
+              f"mem={mems}MB t_iter={sim.t_iter:.2f}s cost=${sim.cost:.5f} "
+              f"(model predicts {r.evaluation.t_iter:.2f}s; "
+              f"solve {r.solve_seconds:.1f}s)")
+    if not results:
+        print("no feasible FuncPipe config for this model/batch on this "
+              "platform (try a smaller batch or the alibaba platform)")
+        return 1
+    rec = planner.recommend(results)
+    print(f"\nRECOMMENDED: d={rec.config.d}, {sum(rec.config.x)+1} stages, "
+          f"t={rec.evaluation.t_iter:.2f}s, ${rec.evaluation.c_iter:.5f}/iter")
+    if args.save_dir:
+        os.makedirs(args.save_dir, exist_ok=True)
+        for plan in saved:
+            path = os.path.join(args.save_dir,
+                                f"{plan.model}-{plan.content_hash}.json")
+            plan.save(path)
+        print(f"saved {len(saved)} plans to {args.save_dir}/")
+
+    print("\nbaseline algorithms (same objective, alpha2=2^19e-9):")
+    base_merge = min(8, merge_to)
+    for name in ("tpdmp", "bayes"):
+        try:
+            s.plan(alpha=(1.0, 2**19 * 1e-9), solver=name,
+                   merge_to=base_merge,
+                   **({"d_options": _FAST["d_options"]} if args.fast else {}))
+        except InfeasiblePlanError:
+            continue
+        r = s.plan_result
+        print(f"  {name}: t={r.evaluation.t_iter:.2f}s "
+              f"${r.evaluation.c_iter:.5f} obj={r.objective:.5f}")
+    return 0
+
+
+# ------------------------------------------------------------------ bench
+def _cmd_bench(args) -> int:
+    try:
+        from benchmarks import run as bench_run
+    except ImportError:
+        raise SystemExit(
+            "the benchmarks/ package is not importable — run from the repo "
+            "root: PYTHONPATH=src python -m repro bench")
+    if args.list:
+        for n in bench_run.BENCH_NAMES:
+            print(n)
+        return 0
+    argv = (["--fast"] if args.fast else []) + (args.names or [])
+    bench_run.main(argv)
+    return 0
+
+
+# ------------------------------------------------------------------- main
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # train/dryrun forward their whole tail to the launch drivers' own
+    # parsers (argparse REMAINDER won't capture a leading option like
+    # --help, so dispatch before parsing)
+    if argv and argv[0] in ("train", "dryrun"):
+        if argv[0] == "train":
+            from repro.launch import train
+
+            return train.main(argv[1:]) or 0
+        from repro.launch import dryrun
+
+        return dryrun.main(argv[1:]) or 0
+
+    ap = argparse.ArgumentParser(
+        prog="repro", description="FuncPipe repro: plan, replay and train "
+        "serverless deployments (see repro.api for the library front door)")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("plan", help="co-optimize and save a DeploymentPlan")
+    _add_model_args(p)
+    _add_solver_args(p)
+    p.add_argument("-o", "--out", default=None, help="write plan JSON here")
+    p.set_defaults(func=_cmd_plan)
+
+    p = sub.add_parser("simulate",
+                       help="replay a plan through the analytic simulator")
+    p.add_argument("plan_file", nargs="?", default=None,
+                   help="saved DeploymentPlan JSON (or pass --model to plan)")
+    _add_model_args(p)
+    _add_solver_args(p)
+    p.set_defaults(func=_cmd_simulate)
+
+    p = sub.add_parser("emulate",
+                       help="execute a plan through the runtime engine")
+    p.add_argument("plan_file", nargs="?", default=None,
+                   help="saved DeploymentPlan JSON (or pass --model to plan)")
+    _add_model_args(p)
+    _add_solver_args(p)
+    p.add_argument("--steps", type=int, default=2)
+    p.add_argument("-o", "--out", default=None,
+                   help="also save the executed plan JSON here")
+    p.add_argument("--numerics", action="store_true",
+                   help="run real JAX through the store (reduced arch)")
+    p.add_argument("--stages", type=int, default=2, help="numeric mode stages")
+    p.add_argument("--dp", type=int, default=2, help="numeric mode DP degree")
+    p.add_argument("--n-layers", type=int, default=4,
+                   help="numeric mode depth")
+    p.set_defaults(func=_cmd_emulate)
+
+    p = sub.add_parser("sweep", help="Pareto frontier + recommendation + "
+                                     "baseline algorithms (paper §5)")
+    _add_model_args(p)
+    p.add_argument("--merge-to", type=int, default=None)
+    p.add_argument("--fast", action="store_true")
+    p.add_argument("--save-dir", default=None,
+                   help="save every swept plan JSON into this directory")
+    p.set_defaults(func=_cmd_sweep)
+
+    p = sub.add_parser("bench", help="run benchmark modules (benchmarks/run.py)")
+    p.add_argument("names", nargs="*", help="bench names (default: all)")
+    p.add_argument("--fast", action="store_true")
+    p.add_argument("--list", action="store_true", help="list bench names")
+    p.set_defaults(func=_cmd_bench)
+
+    # dispatched above before parse_args; registered so --help lists them
+    p = sub.add_parser("train", help="mesh training driver (repro.launch.train)",
+                       add_help=False)
+    p = sub.add_parser("dryrun", help="mesh compile sweep (repro.launch.dryrun)",
+                       add_help=False)
+
+    args = ap.parse_args(argv)
+    from repro.api import InfeasiblePlanError, PlanCompatibilityError
+
+    try:
+        return args.func(args) or 0
+    except (PlanCompatibilityError, InfeasiblePlanError) as e:
+        # operator-facing outcomes, not bugs: exit cleanly with the message
+        raise SystemExit(f"error: {e}") from None
+
+
+if __name__ == "__main__":
+    sys.exit(main())

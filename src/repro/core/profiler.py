@@ -107,3 +107,50 @@ def arch_model_profile(cfg: ArchConfig, platform: Platform, *, seq: int = 512,
     layers.append(_layer(platform, "head", emb_b, out_b, out_b, out_b,
                          2 * cfg.vocab_size * d * seq * micro_batch / 1000))
     return ModelProfile(name=cfg.name, layers=tuple(layers))
+
+
+# ------------------------------------------------------- unified resolution
+def known_models():
+    """All model ids the profiler can resolve (paper models + arch ids)."""
+    from repro.configs import ARCH_IDS
+
+    return sorted(_PAPER_MODELS) + sorted(ARCH_IDS)
+
+
+def resolve_profile(model: str, platform: Platform, *, seq=None,
+                    micro_batch=None) -> ModelProfile:
+    """One front door from a model id to its layer profile.
+
+    Accepts the paper's Table 1 models, any assigned arch id, and the
+    reduced-arch spelling ``<arch>@reduced[<n_layers>]`` that the numeric
+    emulation mode records (so its saved plans replay too); ``None`` keeps
+    each family's own default (paper: micro_batch=4; arch: seq=512,
+    micro_batch=1).  This is the resolution path ``DeploymentPlan.resolve``
+    replays, so the recorded ``profile_args`` must reproduce the profile the
+    plan was solved against."""
+    import dataclasses
+
+    from repro.configs import ARCH_IDS, get_config
+
+    if model in _PAPER_MODELS:
+        return paper_model_profile(model, platform,
+                                   micro_batch=4 if micro_batch is None else micro_batch)
+    base, _, spec = model.partition("@")
+    if base in ARCH_IDS and (not spec or spec.startswith("reduced")):
+        cfg = get_config(base)
+        if spec:
+            cfg = cfg.reduced()
+            depth = spec[len("reduced"):]
+            if depth:
+                try:
+                    cfg = dataclasses.replace(cfg, n_layers=int(depth))
+                except ValueError:
+                    raise KeyError(
+                        f"malformed reduced-arch spec {model!r}: depth "
+                        f"{depth!r} is not an integer") from None
+        return arch_model_profile(cfg, platform,
+                                  seq=512 if seq is None else seq,
+                                  micro_batch=1 if micro_batch is None else micro_batch)
+    raise KeyError(
+        f"unknown model {model!r}; known models: {known_models()} "
+        "(reduced spelling: <arch>@reduced[<L>])")

@@ -1,166 +1,31 @@
-"""Emulated-FaaS training driver: run a FuncPipe plan through the runtime.
+"""Emulated-FaaS training driver — thin shim over ``python -m repro emulate``.
 
-Timing mode (any paper model or assigned arch; planner picks the config):
+The implementation moved to :mod:`repro.cli` when the unified deployment API
+landed; this module stays so ``python -m repro.launch.emulate`` keeps
+working.  Prefer:
 
-    PYTHONPATH=src python -m repro.launch.emulate --model bert-large \\
-        --platform aws --batch 64 --steps 2
-
-Numeric mode (reduced arch, real JAX forward/backward through the emulated
-object store; partition is a period-aligned balanced split):
-
-    PYTHONPATH=src python -m repro.launch.emulate --arch phi3-mini-3.8b \\
-        --numerics --stages 2 --dp 2 --batch 8 --seq 16 --steps 2
-
-Prints the executed plan, per-step losses (numeric mode), the simulated
-time/cost breakdown, and the agreement vs the analytic simulator and the
-closed-form performance model.
+    PYTHONPATH=src python -m repro emulate --model bert-large --batch 64
+    PYTHONPATH=src python -m repro emulate plan.json --steps 2
+    PYTHONPATH=src python -m repro emulate --numerics --model phi3-mini-3.8b \\
+        --stages 2 --dp 2 --batch 8 --seq 16 --steps 2
 """
 from __future__ import annotations
 
-import argparse
-import dataclasses
+import sys
+from typing import List, Optional
 
-from repro.configs import ARCH_IDS, get_config
-from repro.configs.base import InputShape
-from repro.core import planner
-from repro.core.partition import stages_of
-from repro.core.perfmodel import Config, evaluate
-from repro.core.profiler import arch_model_profile, paper_model_profile
-from repro.serverless.frameworks import ALPHA_PAIRS
-from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA, MB
-from repro.serverless.runtime import Execution, run_plan
-from repro.serverless.simulator import simulate_funcpipe
-
-PLATFORMS = {"aws": AWS_LAMBDA, "alibaba": ALIBABA_FC}
+from repro.cli import main as _cli_main
 
 
-def numeric_partition(cfg, n_stages: int) -> tuple:
-    """Boundary vector over the arch profile ([embed]+layers+[head]) cutting
-    at period boundaries so every stage owns whole instances."""
-    L = cfg.n_layers + 2
-    plen = cfg.period_len
-    n_inst = cfg.n_periods
-    assert n_stages <= n_inst, (n_stages, n_inst)
-    x = [0] * (L - 1)
-    for s in range(1, n_stages):
-        inst = round(s * n_inst / n_stages)
-        layer = inst * plen               # first layer of stage s
-        x[layer] = 1                      # cut after profile layer `layer`
-    return tuple(x)
-
-
-def min_feasible_z(profile, platform, x, d, mu):
-    stage_mem = planner._min_feasible_stage_mem(profile, platform, x, d, mu)
-    if stage_mem is None:
-        raise SystemExit("no memory option fits the per-stage working set")
-    return planner._expand_z(stage_mem, x, profile.L)
-
-
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--model", default=None, help="paper model (timing mode)")
-    ap.add_argument("--arch", default=None, help="assigned arch id")
-    ap.add_argument("--platform", default="aws", choices=sorted(PLATFORMS))
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--micro-batch", type=int, default=4)
-    ap.add_argument("--steps", type=int, default=2)
-    ap.add_argument("--numerics", action="store_true",
-                    help="run real JAX through the store (reduced arch)")
-    ap.add_argument("--stages", type=int, default=2, help="numeric mode stages")
-    ap.add_argument("--dp", type=int, default=2, help="numeric mode DP degree")
-    ap.add_argument("--seq", type=int, default=16, help="numeric mode seq len")
-    ap.add_argument("--n-layers", type=int, default=4, help="numeric mode depth")
-    ap.add_argument("--lambda-ml-sync", action="store_true",
-                    help="use the 3-phase eq (1) collective instead of eq (2)")
-    ap.add_argument("--contention", action="store_true")
-    args = ap.parse_args(argv)
-    platform = PLATFORMS[args.platform]
-    pipelined = not args.lambda_ml_sync
-
-    if args.numerics:
-        import jax
-
-        from repro.data.synthetic import make_batch
-        from repro.models import registry
-        from repro.optim import AdamW
-
-        arch = args.arch or "phi3-mini-3.8b"
-        cfg = dataclasses.replace(get_config(arch).reduced(),
-                                  n_layers=args.n_layers)
-        shape = InputShape("emulate", args.seq, args.batch, "train")
-        mu = max(1, args.batch // (args.dp * 2))
-        if args.batch % (args.dp * mu):
-            raise SystemExit(
-                f"--batch {args.batch} must be divisible by dp*mu "
-                f"= {args.dp}*{mu}")
-        if args.stages > cfg.n_periods:
-            raise SystemExit(
-                f"--stages {args.stages} exceeds the {cfg.n_periods} period "
-                f"instances of {arch} at --n-layers {args.n_layers}")
-        mb = args.batch // (args.dp * mu)
-        prof = arch_model_profile(cfg, platform, seq=args.seq, micro_batch=mb)
-        x = numeric_partition(cfg, args.stages)
-        z = min_feasible_z(prof, platform, x, args.dp, mu)
-        config = Config(x=x, d=args.dp, z=z)
-        M = args.dp * mu
-        params0 = registry.init_params(cfg, jax.random.PRNGKey(0))
-        ex = Execution(
-            cfg=cfg, optimizer=AdamW(lr=1e-2), init_params=params0,
-            batch_fn=lambda k: make_batch(cfg, shape, step=k),
-        )
-    else:
-        from repro.core.profiler import _PAPER_MODELS
-
-        model = args.model or "bert-large"
-        if model in ARCH_IDS:
-            prof_full = arch_model_profile(get_config(model), platform)
-        elif model in _PAPER_MODELS:
-            prof_full = paper_model_profile(model, platform)
-        else:
-            raise SystemExit(
-                f"unknown model {model!r}; paper models: "
-                f"{sorted(_PAPER_MODELS)}, archs: {sorted(ARCH_IDS)}")
-        M = max(1, args.batch // args.micro_batch)
-        r = planner.solve(prof_full, platform, alpha=ALPHA_PAIRS[1],
-                          total_micro_batches=M, merge_to=8,
-                          pipelined_sync=pipelined)
-        if r is None:
-            raise SystemExit(f"planner found no feasible config for {model}")
-        prof, config = r.profile, r.config
-        ex = None
-
-    st = stages_of(config.x)
-    mems = [platform.memory_options[config.z[lo]] // MB for lo, _ in st]
-    print(f"plan: {len(st)} stages x d={config.d} "
-          f"({len(st) * config.d} workers), mem={mems}MB, "
-          f"micro_batches={M} (mu={max(1, M // config.d)}/worker), "
-          f"platform={platform.name}, sync={'eq(2)' if pipelined else 'eq(1)'}")
-
-    res = run_plan(prof, platform, config, M, steps=args.steps,
-                   pipelined_sync=pipelined, contention=args.contention,
-                   execution=ex)
-    if res.metrics:
-        for k, m in enumerate(res.metrics):
-            print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
-                  f"aux={m['aux']:.4f}")
-    bd = res.breakdown
-    print(f"engine: t_iter={res.t_iter:.3f}s cost=${res.cost:.6f}/iter "
-          f"mem={res.total_mem_gb:.1f}GB "
-          f"(compute={bd['compute']:.3f}s pipe_comm={bd['pipeline_comm']:.3f}s "
-          f"sync={bd['sync']:.3f}s)")
-    ss = res.store_stats
-    print(f"store: {ss.puts} puts / {ss.gets} gets, "
-          f"{ss.bytes_in / MB:.0f}MB in / {ss.bytes_out / MB:.0f}MB out, "
-          f"peak {ss.peak_bytes / MB:.0f}MB")
-
-    sim = simulate_funcpipe(prof, platform, config, M,
-                            pipelined_sync=pipelined,
-                            contention=args.contention)
-    ev = evaluate(prof, platform, config, M, pipelined_sync=pipelined)
-    for name, t in [("simulator", sim.t_iter), ("perfmodel", ev.t_iter)]:
-        print(f"vs {name}: t_iter={t:.3f}s "
-              f"(rel err {abs(res.t_iter - t) / t:.1%})")
+def main(argv: Optional[List[str]] = None) -> int:
+    args = list(sys.argv[1:] if argv is None else argv)
+    # the pre-API driver spelled the arch flag --arch; keep both forms working
+    args = ["--model" if a == "--arch"
+            else "--model=" + a[len("--arch="):] if a.startswith("--arch=")
+            else a
+            for a in args]
+    return _cli_main(["emulate", *args])
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

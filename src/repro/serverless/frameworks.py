@@ -92,6 +92,7 @@ class FuncPipeResult:
     plans: List[planner.PlanResult]
     sims: List[SimResult]
     recommended: int  # index into plans/sims
+    deployment_plans: Optional[List] = None  # DeploymentPlans when replayed
 
     @property
     def recommended_sim(self) -> SimResult:
@@ -107,6 +108,43 @@ ALPHA_PAIRS: Tuple[Tuple[float, float], ...] = (
 )
 
 
+def funcpipe_replay(
+    deployment_plans: Sequence,
+    *,
+    contention: bool = False,
+) -> Optional[FuncPipeResult]:
+    """The FuncPipe policy over saved :class:`repro.api.DeploymentPlan`
+    artifacts — no solver run.  Each plan is resolved (fingerprint-checked
+    against its recorded model/platform), identical configs are deduped,
+    then simulated under this call's ``contention`` setting and fed through
+    the same §5.1 recommendation as :func:`funcpipe`."""
+    from repro.core.perfmodel import evaluate
+
+    uniq, sims, kept = [], [], []
+    seen = set()
+    for p in deployment_plans:
+        key = (p.x, p.d, p.z)       # dedupe before the profile rebuild
+        if key in seen:
+            continue
+        seen.add(key)
+        rp = p.resolve()
+        ev = evaluate(rp.profile, rp.platform, rp.config,
+                      rp.total_micro_batches,
+                      pipelined_sync=rp.pipelined_sync)
+        uniq.append(planner.PlanResult(
+            rp.config, ev, ev.objective(*p.alpha), p.solve_seconds,
+            rp.profile))
+        sims.append(simulate_funcpipe(
+            rp.profile, rp.platform, rp.config, rp.total_micro_batches,
+            pipelined_sync=rp.pipelined_sync, contention=contention))
+        kept.append(p)
+    if not uniq:
+        return None
+    rec = uniq.index(planner.recommend(uniq))
+    return FuncPipeResult(plans=uniq, sims=sims, recommended=rec,
+                          deployment_plans=kept)
+
+
 def funcpipe(
     profile: ModelProfile,
     platform: Platform,
@@ -119,6 +157,10 @@ def funcpipe(
     contention: bool = False,
     d_options: Sequence[int] = planner.DEFAULT_D_OPTIONS,
 ) -> Optional[FuncPipeResult]:
+    """FuncPipe policy: co-optimized plans across the objective weights.
+
+    To replay saved DeploymentPlans instead of solving, use
+    :func:`funcpipe_replay`."""
     M = max(1, global_batch // micro_batch)
     plans = []
     for alpha in alphas:

@@ -72,3 +72,23 @@ ALIBABA_FC = Platform(
     flops_per_vcpu=40e9,
     storage_total_bandwidth=10e9 / 8,  # OSS: 10 Gb/s total (§5.7)
 )
+
+
+# name -> Platform, including the short aliases the CLI accepts; serialized
+# DeploymentPlans record `Platform.name` so loading resolves through here
+PLATFORMS = {
+    "aws_lambda": AWS_LAMBDA,
+    "aws": AWS_LAMBDA,
+    "alibaba_fc": ALIBABA_FC,
+    "alibaba": ALIBABA_FC,
+}
+
+
+def get_platform(name: str) -> Platform:
+    """Resolve a platform by name or alias (case-insensitive)."""
+    try:
+        return PLATFORMS[name.lower()]
+    except KeyError:
+        raise KeyError(
+            f"unknown platform {name!r}; known: {sorted(set(PLATFORMS))}"
+        ) from None

@@ -39,7 +39,7 @@ from repro.serverless.runtime.scatter_reduce import (
     three_phase_scatter_reduce,
 )
 from repro.serverless.runtime.store import ObjectStore, StageChannel, StoreStats
-from repro.serverless.simulator import stage_aggregates
+from repro.serverless.simulator import stage_aggregates, unpack_plan_args
 
 
 @dataclass(frozen=True)
@@ -51,6 +51,7 @@ class Execution:
     init_params: dict                         # registry.init_params layout
     batch_fn: Callable[[int], dict]           # step -> global batch (leaves [B, ...])
     jit: bool = True                          # jit-cache stage fwd/bwd per shape
+    remat: bool = False                       # recompute fwd in bwd (A/B only)
 
 
 @dataclass(frozen=True)
@@ -87,17 +88,24 @@ def _split_batch(batch: dict, r: int, d: int, m: int, mu: int):
 
 
 def run_plan(
-    profile: ModelProfile,
-    platform: Platform,
-    config: Config,
-    total_micro_batches: int,
+    profile,
+    platform: Optional[Platform] = None,
+    config: Optional[Config] = None,
+    total_micro_batches: Optional[int] = None,
     *,
     steps: int = 1,
-    pipelined_sync: bool = True,
+    pipelined_sync: Optional[bool] = None,
     contention: bool = False,
     execution: Optional[Execution] = None,
 ) -> EngineResult:
-    """Execute ``steps`` training iterations of the plan through the store."""
+    """Execute ``steps`` training iterations of the plan through the store.
+
+    Accepts either the explicit ``(profile, platform, config, M)`` tuple or a
+    single :class:`repro.api.DeploymentPlan` as the first argument (see
+    ``simulator.unpack_plan_args``)."""
+    profile, platform, config, total_micro_batches, pipelined_sync = \
+        unpack_plan_args("run_plan", profile, platform, config,
+                         total_micro_batches, pipelined_sync)
     agg = stage_aggregates(profile, platform, config, total_micro_batches,
                            contention=contention)
     S, mu, d = agg.S, agg.mu, agg.d
@@ -114,7 +122,7 @@ def run_plan(
         assert len(spans) == S
         workers = [[StageWorker(execution.cfg, spans[s], execution.init_params,
                                 mu=mu, optimizer=execution.optimizer,
-                                jit=execution.jit)
+                                jit=execution.jit, remat=execution.remat)
                     for r in range(d)] for s in range(S)]
 
     metrics: List[Dict[str, float]] = []

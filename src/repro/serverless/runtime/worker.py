@@ -16,17 +16,19 @@ those cuts onto period-instance ranges; cuts must fall on period boundaries
 (always true for ``period_len == 1`` families).
 
 Backward runs through ``jax.vjp``.  With ``jit=True`` (default) the worker
-caches a jitted forward and a jitted recompute-backward per input-shape
-signature — the seed implementation re-traced an un-jitted ``jax.vjp``
-closure on every micro-batch, which dominated engine wall-clock (see the
-``walltime`` rows of ``benchmarks/runtime_accuracy.py``).  The jitted
-backward rematerializes the forward inside the VJP instead of holding the
-eager residual closure; either way the emulated worker keeps residuals in
-function memory, exactly what the paper's activation-memory term
-``mu * a_i`` accounts for.  Gradients are accumulated in fp32 across
-micro-batches; ``grad_vector`` flattens them for the storage scatter-reduce
-and ``apply_update`` applies the optimizer on fp32 masters (same math as
-``testing.pipeline_equiv.reference_step``).
+caches a jitted forward and a jitted backward per input-shape signature —
+the seed implementation re-traced an un-jitted ``jax.vjp`` closure on every
+micro-batch, which dominated engine wall-clock (see the ``walltime`` rows of
+``benchmarks/runtime_accuracy.py``).  The jitted forward runs ``jax.vjp``
+*inside* the jit and returns the residual-carrying pullback (a
+``jax.tree_util.Partial`` pytree), so the backward consumes cached
+residuals instead of recomputing the forward inside the VJP — the
+recompute variant is kept behind ``remat=True`` for the A/B wall-clock
+comparison.  Holding residuals between fwd and bwd is exactly what the
+paper's activation-memory term ``mu * a_i`` accounts for.  Gradients are
+accumulated in fp32 across micro-batches; ``grad_vector`` flattens them for
+the storage scatter-reduce and ``apply_update`` applies the optimizer on
+fp32 masters (same math as ``testing.pipeline_equiv.reference_step``).
 
 MoE note: the router aux loss is seeded per micro-batch (weight ``1/mu``),
 which matches full-batch routing only when the aux statistic is linear in
@@ -101,7 +103,8 @@ class StageWorker:
     """One serverless function: params + optimizer shard for a stage span."""
 
     def __init__(self, cfg: ArchConfig, span: StageSpan, full_params: dict,
-                 *, mu: int, optimizer: Optimizer, jit: bool = True):
+                 *, mu: int, optimizer: Optimizer, jit: bool = True,
+                 remat: bool = False):
         if cfg.frontend != "none":
             raise NotImplementedError(
                 "runtime numeric execution covers token-LM archs; "
@@ -149,7 +152,9 @@ class StageWorker:
         self._vjps: Dict[int, Any] = {}
         self._grad_acc = None
         self.jit = jit
+        self.remat = remat
         self._saved_inputs: Dict[int, Tuple[Any, Any]] = {}
+        self._saved_sigs: Dict[int, Any] = {}
         self._jitted: Dict[Any, Tuple[Any, Any]] = {}  # shape sig -> (fwd, bwd)
 
     # ------------------------------------------------------------- stage math
@@ -191,29 +196,48 @@ class StageWorker:
 
     def _get_jitted(self, sig):
         """Jitted (fwd, bwd) pair for one (stage-shape, micro-batch-shape)
-        signature.  Traced once per signature instead of per micro-batch;
-        the backward recomputes the forward inside the VJP so no eager
-        closure needs to survive between the two calls."""
+        signature, traced once per signature instead of per micro-batch.
+
+        Default (``remat=False``): the forward runs ``jax.vjp`` under jit and
+        returns the pullback as a ``jax.tree_util.Partial`` — its leaves ARE
+        the residuals, cached in function memory until the backward consumes
+        them, so the backward does no forward recompute.  ``remat=True``
+        keeps the recompute-inside-VJP variant (no residuals held) for the
+        wall-clock A/B in ``benchmarks/runtime_accuracy.py``."""
         fns = self._jitted.get(sig)
         if fns is not None:
             return fns
 
-        def fwd_fn(params, x_in, batch_mb):
-            return self._stage_fn(params, x_in, batch_mb)
-
-        def bwd_fn(params, x_in, batch_mb, g_out):
-            seed = jnp.asarray(1.0 / self.mu, jnp.float32)
+        def vjp_of(params, x_in, batch_mb):
             if self.span.owns_embed:
-                _, vjp = jax.vjp(lambda p: self._stage_fn(p, None, batch_mb),
-                                 params)
-            else:
-                _, vjp = jax.vjp(lambda p, x: self._stage_fn(p, x, batch_mb),
-                                 params, x_in)
-            cot = (seed, seed) if self.span.owns_head else (g_out, seed)
-            grads = vjp(cot)
+                return jax.vjp(lambda p: self._stage_fn(p, None, batch_mb),
+                               params)
+            return jax.vjp(lambda p, x: self._stage_fn(p, x, batch_mb),
+                           params, x_in)
+
+        def unpack(grads):
             g_params = jax.tree.map(lambda g: g.astype(jnp.float32), grads[0])
             g_in = grads[1] if len(grads) > 1 else None
             return g_params, g_in
+
+        def cotangent(g_out):
+            seed = jnp.asarray(1.0 / self.mu, jnp.float32)
+            return (seed, seed) if self.span.owns_head else (g_out, seed)
+
+        if self.remat:
+            def fwd_fn(params, x_in, batch_mb):
+                return self._stage_fn(params, x_in, batch_mb)
+
+            def bwd_fn(params, x_in, batch_mb, g_out):
+                _, vjp = vjp_of(params, x_in, batch_mb)
+                return unpack(vjp(cotangent(g_out)))
+        else:
+            def fwd_fn(params, x_in, batch_mb):
+                out_aux, vjp = vjp_of(params, x_in, batch_mb)
+                return out_aux, vjp
+
+            def bwd_fn(vjp, g_out):
+                return unpack(vjp(cotangent(g_out)))
 
         fns = (jax.jit(fwd_fn), jax.jit(bwd_fn))
         self._jitted[sig] = fns
@@ -226,9 +250,15 @@ class StageWorker:
         last stage."""
         if self.jit:
             x_val = None if self.span.owns_embed else jnp.asarray(x_in)
-            fwd, _ = self._get_jitted(self._shape_sig(x_val, batch_mb))
-            out, aux = fwd(self.params, x_val, batch_mb)
-            self._saved_inputs[m] = (x_val, batch_mb)
+            sig = self._shape_sig(x_val, batch_mb)
+            fwd, _ = self._get_jitted(sig)
+            if self.remat:
+                out, aux = fwd(self.params, x_val, batch_mb)
+                self._saved_inputs[m] = (x_val, batch_mb)
+            else:
+                (out, aux), vjp = fwd(self.params, x_val, batch_mb)
+                self._vjps[m] = vjp          # residuals cached until backward
+                self._saved_sigs[m] = sig
             return out, float(aux)
         if self.span.owns_embed:
             out_aux, vjp = jax.vjp(
@@ -252,10 +282,15 @@ class StageWorker:
         from stage s+1 (ignored on the last stage, which seeds the loss).
         Returns the cotangent for stage s-1 (None on stage 0)."""
         if self.jit:
-            x_val, batch_mb = self._saved_inputs.pop(m)
-            _, bwd = self._get_jitted(self._shape_sig(x_val, batch_mb))
             g_val = None if self.span.owns_head else jnp.asarray(g_out)
-            g_params, g_in = bwd(self.params, x_val, batch_mb, g_val)
+            if self.remat:
+                x_val, batch_mb = self._saved_inputs.pop(m)
+                _, bwd = self._get_jitted(self._shape_sig(x_val, batch_mb))
+                g_params, g_in = bwd(self.params, x_val, batch_mb, g_val)
+            else:
+                vjp = self._vjps.pop(m)      # frees residuals after the call
+                _, bwd = self._get_jitted(self._saved_sigs.pop(m))
+                g_params, g_in = bwd(vjp, g_val)
             self._accumulate(g_params)
             return g_in
         vjp = self._vjps.pop(m)

@@ -159,16 +159,54 @@ def stage_aggregates(
     )
 
 
+def unpack_plan_args(fn_name, profile, platform, config, total_micro_batches,
+                     pipelined_sync):
+    """Shared DeploymentPlan front door for the plan-accepting entry points
+    (this module's :func:`simulate_funcpipe` and ``runtime.run_plan``): a
+    plan as the first argument is resolved — profile rebuilt +
+    fingerprint-checked — and its recorded sync algorithm used unless
+    ``pipelined_sync`` overrides it.  Mixing a plan with explicit
+    platform/config/M is rejected rather than silently ignored."""
+    if not isinstance(profile, ModelProfile):
+        if not hasattr(profile, "resolve"):
+            raise TypeError(
+                f"{fn_name} takes (profile, platform, config, M) or a "
+                f"DeploymentPlan as first argument, got "
+                f"{type(profile).__name__}")
+        if platform is not None or config is not None \
+                or total_micro_batches is not None:
+            raise ValueError(
+                f"{fn_name}(plan, ...) takes no platform/config/"
+                "total_micro_batches — they are recorded in the plan; use "
+                "plan.resolve(platform=...) for overrides")
+        rp = profile.resolve()
+        if pipelined_sync is None:
+            pipelined_sync = rp.pipelined_sync
+        profile, platform, config = rp.profile, rp.platform, rp.config
+        total_micro_batches = rp.total_micro_batches
+    if pipelined_sync is None:
+        pipelined_sync = True
+    return profile, platform, config, total_micro_batches, pipelined_sync
+
+
 # ------------------------------------------------------------------- FuncPipe
 def simulate_funcpipe(
-    profile: ModelProfile,
-    platform: Platform,
-    config: Config,
-    total_micro_batches: int,
+    profile,
+    platform: Optional[Platform] = None,
+    config: Optional[Config] = None,
+    total_micro_batches: Optional[int] = None,
     *,
-    pipelined_sync: bool = True,
+    pipelined_sync: Optional[bool] = None,
     contention: bool = False,
 ) -> SimResult:
+    """Simulate one FuncPipe iteration.
+
+    Accepts either the explicit ``(profile, platform, config, M)`` tuple or
+    a single :class:`repro.api.DeploymentPlan` as the first argument (see
+    :func:`unpack_plan_args`)."""
+    profile, platform, config, total_micro_batches, pipelined_sync = \
+        unpack_plan_args("simulate_funcpipe", profile, platform, config,
+                         total_micro_batches, pipelined_sync)
     agg = stage_aggregates(profile, platform, config, total_micro_batches,
                            contention=contention)
     S, mu, d = agg.S, agg.mu, agg.d

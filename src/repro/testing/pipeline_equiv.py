@@ -112,9 +112,12 @@ def run(arch_id="phi3-mini-3.8b", stages=4, tensor=1, n_layers=None,
 
 
 if __name__ == "__main__":
-    arch = sys.argv[1] if len(sys.argv) > 1 else "phi3-mini-3.8b"
-    stages = int(sys.argv[2]) if len(sys.argv) > 2 else 4
-    tensor = int(sys.argv[3]) if len(sys.argv) > 3 else 1
-    n_layers = int(sys.argv[4]) if len(sys.argv) > 4 else None
-    ok = run(arch, stages, tensor, n_layers)
-    sys.exit(0 if ok else 1)
+    import argparse
+
+    ap = argparse.ArgumentParser(description="pipeline-vs-monolithic check")
+    ap.add_argument("arch", nargs="?", default="phi3-mini-3.8b")
+    ap.add_argument("stages", nargs="?", type=int, default=4)
+    ap.add_argument("tensor", nargs="?", type=int, default=1)
+    ap.add_argument("n_layers", nargs="?", type=int, default=None)
+    a = ap.parse_args()
+    sys.exit(0 if run(a.arch, a.stages, a.tensor, a.n_layers) else 1)

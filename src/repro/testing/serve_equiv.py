@@ -95,8 +95,12 @@ def run(arch_id="phi3-mini-3.8b", stages=4, tensor=1, seq_shards=1,
 
 
 if __name__ == "__main__":
-    arch = sys.argv[1] if len(sys.argv) > 1 else "phi3-mini-3.8b"
-    stages = int(sys.argv[2]) if len(sys.argv) > 2 else 4
-    tensor = int(sys.argv[3]) if len(sys.argv) > 3 else 1
-    seq_shards = int(sys.argv[4]) if len(sys.argv) > 4 else 1
-    sys.exit(0 if run(arch, stages, tensor, seq_shards) else 1)
+    import argparse
+
+    ap = argparse.ArgumentParser(description="serve pipeline equivalence check")
+    ap.add_argument("arch", nargs="?", default="phi3-mini-3.8b")
+    ap.add_argument("stages", nargs="?", type=int, default=4)
+    ap.add_argument("tensor", nargs="?", type=int, default=1)
+    ap.add_argument("seq_shards", nargs="?", type=int, default=1)
+    a = ap.parse_args()
+    sys.exit(0 if run(a.arch, a.stages, a.tensor, a.seq_shards) else 1)

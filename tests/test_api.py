@@ -1,0 +1,292 @@
+"""Unified deployment API: DeploymentPlan JSON round-trip + content hash,
+fingerprint compatibility guard, Session fluency, parity of the plan-replay
+paths against the raw (profile, platform, config, M) call paths, and smoke
+tests for every ``python -m repro`` CLI subcommand."""
+import dataclasses
+import json
+
+import pytest
+
+from _hypo import given, settings, st
+
+from repro.api import DeploymentPlan, PlanCompatibilityError, session
+from repro.api.plan import profile_fingerprint
+from repro.cli import main as cli_main
+from repro.core import planner
+from repro.core.partition import merge_layers
+from repro.core.perfmodel import evaluate
+from repro.core.profiler import paper_model_profile, resolve_profile
+from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA
+from repro.serverless.runtime import run_plan
+from repro.serverless.simulator import simulate_funcpipe
+
+ALPHA = (1.0, 2**16 * 1e-9)
+FAST = dict(merge_to=6, d_options=(1, 2, 4))
+
+
+@pytest.fixture(scope="module")
+def bert_session():
+    return session("bert-large", platform="aws", global_batch=64).plan(
+        alpha=ALPHA, **FAST)
+
+
+# ----------------------------------------------------------- serialization
+def test_json_round_trip_and_stable_hash(bert_session):
+    plan = bert_session.deployment_plan
+    blob = plan.to_json()
+    again = DeploymentPlan.from_json(blob)
+    assert again == plan
+    assert again.content_hash == plan.content_hash
+    # hash is over content: provenance timing must not affect it
+    assert dataclasses.replace(plan, solve_seconds=99.0).content_hash \
+        == plan.content_hash
+    # ... but decisions must
+    assert dataclasses.replace(plan, d=plan.d * 2).content_hash \
+        != plan.content_hash
+
+
+def test_from_json_rejects_bad_schema(bert_session):
+    d = json.loads(bert_session.deployment_plan.to_json())
+    with pytest.raises(PlanCompatibilityError):
+        DeploymentPlan.from_json(json.dumps({**d, "version": 99}))
+    with pytest.raises(PlanCompatibilityError):
+        DeploymentPlan.from_json(json.dumps({**d, "surprise": 1}))
+    d.pop("x")
+    with pytest.raises(PlanCompatibilityError):
+        DeploymentPlan.from_json(json.dumps(d))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_round_trip_property(data):
+    """Any plan-shaped value survives to_json/from_json exactly, and equal
+    plans hash equal (solver provenance aside)."""
+    L = data.draw(st.integers(min_value=2, max_value=8))
+    x = tuple(data.draw(st.integers(0, 1)) for _ in range(L - 1))
+    z = tuple(data.draw(st.integers(0, 7)) for _ in range(L))
+    plan = DeploymentPlan(
+        model=data.draw(st.sampled_from(["bert-large", "resnet101", "m"])),
+        platform=data.draw(st.sampled_from(["aws_lambda", "alibaba_fc"])),
+        x=x, z=z, d=data.draw(st.sampled_from([1, 2, 4, 8])),
+        total_micro_batches=data.draw(st.integers(1, 64)),
+        alpha=(1.0, data.draw(st.floats(0, 1e-2, allow_nan=False))),
+        pipelined_sync=data.draw(st.booleans()),
+        merge_to=data.draw(st.one_of(st.none(), st.integers(2, 16))),
+        seq=data.draw(st.one_of(st.none(), st.integers(8, 512))),
+        micro_batch=data.draw(st.one_of(st.none(), st.integers(1, 8))),
+        profile_fingerprint="ab" * 8,
+        t_iter=data.draw(st.floats(0, 1e4, allow_nan=False)),
+        c_iter=data.draw(st.floats(0, 1e2, allow_nan=False)),
+        objective=data.draw(st.floats(0, 1e4, allow_nan=False)),
+        solver="cd", engine="batch",
+        solve_seconds=data.draw(st.floats(0, 1e3, allow_nan=False)),
+    )
+    again = DeploymentPlan.from_json(plan.to_json())
+    assert again == plan
+    assert again.content_hash == plan.content_hash
+
+
+# ------------------------------------------------------------- fingerprint
+def test_resolve_profile_reduced_arch_spelling():
+    """The numeric emulation mode records `<arch>@reduced<L>`; it must
+    resolve to the same profile the mode built, so saved plans replay."""
+    import dataclasses as dc
+
+    from repro.configs import get_config
+    from repro.core.profiler import arch_model_profile
+
+    cfg = dc.replace(get_config("phi3-mini-3.8b").reduced(), n_layers=4)
+    direct = arch_model_profile(cfg, AWS_LAMBDA, seq=16, micro_batch=2)
+    via_id = resolve_profile("phi3-mini-3.8b@reduced4", AWS_LAMBDA,
+                             seq=16, micro_batch=2)
+    assert profile_fingerprint(via_id) == profile_fingerprint(direct)
+    with pytest.raises(KeyError):
+        resolve_profile("phi3-mini-3.8b@huge", AWS_LAMBDA)
+
+
+def test_fingerprint_tracks_profile_content():
+    a = paper_model_profile("bert-large", AWS_LAMBDA)
+    b = paper_model_profile("bert-large", AWS_LAMBDA)
+    assert profile_fingerprint(a) == profile_fingerprint(b)
+    assert profile_fingerprint(a) != profile_fingerprint(
+        paper_model_profile("bert-large", ALIBABA_FC))
+    assert profile_fingerprint(a) != profile_fingerprint(merge_layers(a, 8))
+
+
+def test_fingerprint_catches_platform_drift(bert_session):
+    """Pricing/bandwidth/latency drift doesn't change the layer tables, but
+    a replayed plan must still refuse: the platform is folded into the
+    recorded fingerprint."""
+    plan = bert_session.deployment_plan
+    drifted = dataclasses.replace(AWS_LAMBDA, price_per_gb_s=1e-3)
+    prof = merge_layers(
+        resolve_profile("bert-large", AWS_LAMBDA), plan.merge_to)
+    plan.resolve(profile=prof, platform=AWS_LAMBDA)        # unchanged: fine
+    with pytest.raises(PlanCompatibilityError, match="fingerprint"):
+        plan.resolve(profile=prof, platform=drifted)
+
+
+def test_mismatched_fingerprint_raises(bert_session):
+    plan = bert_session.deployment_plan
+    bad = dataclasses.replace(plan, profile_fingerprint="0" * 16)
+    with pytest.raises(PlanCompatibilityError, match="fingerprint mismatch"):
+        bad.resolve()
+    with pytest.raises(PlanCompatibilityError):
+        bad.simulate()
+    # a plan replayed against the wrong platform must refuse too
+    wrong = dataclasses.replace(plan, platform="alibaba_fc")
+    with pytest.raises(PlanCompatibilityError):
+        wrong.resolve()
+    # unknown model / platform names give the clear error, not KeyError
+    with pytest.raises(PlanCompatibilityError):
+        dataclasses.replace(plan, model="no-such-model").resolve()
+    with pytest.raises(PlanCompatibilityError):
+        dataclasses.replace(plan, platform="no-such-cloud").resolve()
+
+
+# ------------------------------------------------------------------ parity
+def test_replay_matches_in_memory_paths_exactly(bert_session):
+    """simulate/emulate through the DeploymentPlan front door must be
+    bit-identical to the old hand-threaded (profile, platform, config, M)
+    call paths — including after a JSON round trip."""
+    plan = DeploymentPlan.from_json(bert_session.deployment_plan.to_json())
+    prof = merge_layers(
+        resolve_profile("bert-large", AWS_LAMBDA), plan.merge_to)
+    M = plan.total_micro_batches
+    r = planner.solve(prof, AWS_LAMBDA, alpha=ALPHA, total_micro_batches=M,
+                      merge_to=plan.merge_to, d_options=FAST["d_options"])
+    assert r.config == plan.config
+
+    old_sim = simulate_funcpipe(r.profile, AWS_LAMBDA, r.config, M)
+    old_eng = run_plan(r.profile, AWS_LAMBDA, r.config, M, steps=2)
+    old_ev = evaluate(r.profile, AWS_LAMBDA, r.config, M)
+
+    assert plan.simulate().t_iter == old_sim.t_iter
+    assert plan.simulate().cost == old_sim.cost
+    assert simulate_funcpipe(plan).t_iter == old_sim.t_iter  # direct accept
+    assert plan.emulate(steps=2).t_iter == old_eng.t_iter
+    assert run_plan(plan, steps=2).t_iter == old_eng.t_iter  # direct accept
+    assert plan.evaluate().t_iter == old_ev.t_iter
+    assert plan.t_iter == old_ev.t_iter
+
+
+def test_funcpipe_baseline_accepts_deployment_plans(bert_session):
+    from repro.serverless import frameworks
+
+    plan = bert_session.deployment_plan
+    res = frameworks.funcpipe_replay([plan, plan])
+    assert len(res.sims) == 1                       # deduped identical configs
+    assert res.deployment_plans == [plan]
+    assert res.recommended_sim.t_iter == plan.simulate().t_iter
+
+
+# ----------------------------------------------------------------- session
+def test_session_fluent_chain(bert_session):
+    s = bert_session.simulate().emulate(steps=1)
+    assert s.sim_result is not None and s.engine_result is not None
+    assert s.sim_result.t_iter == pytest.approx(s.deployment_plan.t_iter)
+    assert s.plan_result.config == s.deployment_plan.config
+
+
+def test_session_save_load_and_drift_guard(tmp_path):
+    s = session("bert-large", platform="aws", global_batch=32).plan(
+        alpha=ALPHA, **FAST)
+    path = tmp_path / "plan.json"
+    s.save_plan(path)
+    s2 = session("bert-large", platform="aws", global_batch=32).load_plan(path)
+    assert s2.deployment_plan == s.deployment_plan
+
+    # a session whose freshly-built profile differs must refuse the plan
+    blob = json.loads(path.read_text())
+    blob["profile_fingerprint"] = "f" * 16
+    path.write_text(json.dumps(blob))
+    with pytest.raises(PlanCompatibilityError):
+        session("bert-large", platform="aws", global_batch=32).load_plan(path)
+
+
+def test_session_sweep_recommends():
+    s = session("bert-large", platform="aws", global_batch=32).sweep(**FAST)
+    assert len(s.plans) >= 1
+    assert s.deployment_plan is s.plans[s.recommended]
+    # every solver path produces a plan artifact
+    for solver in ("tpdmp", "bayes"):
+        s.plan(alpha=ALPHA, solver=solver, merge_to=6)
+        assert s.deployment_plan.solver == solver
+
+
+def test_session_rejects_unknown(tmp_path):
+    with pytest.raises(KeyError):
+        session("bert-large", platform="nope")
+    with pytest.raises(KeyError):
+        session("no-such-model").profile()
+    with pytest.raises(ValueError):
+        session("bert-large").plan(solver="gurobi", **FAST)
+
+
+# --------------------------------------------------------------- CLI smoke
+def _run_cli(capsys, *argv):
+    rc = cli_main(list(argv))
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    return out
+
+
+def test_cli_plan_simulate_emulate_replay(tmp_path, capsys):
+    """Acceptance path: `repro plan -o f` then `repro simulate f` and
+    `repro emulate f` replay the saved JSON bit-identically."""
+    path = tmp_path / "plan.json"
+    out = _run_cli(capsys, "plan", "--model", "bert-large", "--batch", "64",
+                   "--fast", "-o", str(path))
+    assert "wrote" in out
+    plan = DeploymentPlan.load(path)
+
+    sim_out = _run_cli(capsys, "simulate", str(path))
+    eng_out = _run_cli(capsys, "emulate", str(path), "--steps", "2")
+    sim = plan.simulate()
+    eng = plan.emulate(steps=2)
+    assert f"t_iter={sim.t_iter:.3f}s" in sim_out
+    assert f"cost=${sim.cost:.6f}/iter" in sim_out
+    assert f"t_iter={eng.t_iter:.3f}s" in eng_out
+    assert plan.content_hash in sim_out
+
+
+def test_cli_sweep(capsys, tmp_path):
+    out = _run_cli(capsys, "sweep", "--model", "bert-large", "--batch", "32",
+                   "--fast", "--save-dir", str(tmp_path / "plans"))
+    assert "RECOMMENDED" in out
+    assert "alpha2=" in out
+    saved = list((tmp_path / "plans").glob("*.json"))
+    assert saved, "sweep --save-dir wrote no plans"
+    for p in saved:
+        DeploymentPlan.load(p).resolve()    # all replayable
+
+
+def test_cli_bench_list(capsys):
+    out = _run_cli(capsys, "bench", "--list")
+    assert "runtime_accuracy" in out and "planner" in out
+
+
+def test_cli_train_dryrun_help(capsys):
+    # the front door lists every subcommand (train/dryrun are pass-through;
+    # importing repro.launch.dryrun sets XLA_FLAGS, so only `train --help`
+    # is exercised in-process)
+    with pytest.raises(SystemExit) as e:
+        cli_main(["--help"])
+    assert e.value.code == 0
+    out = capsys.readouterr().out
+    for sub in ("plan", "simulate", "emulate", "sweep", "bench", "train",
+                "dryrun"):
+        assert sub in out
+    with pytest.raises(SystemExit) as e:
+        cli_main(["train", "--help"])
+    assert e.value.code == 0
+    assert "usage" in capsys.readouterr().out.lower()
+
+
+def test_launch_emulate_shim(capsys):
+    from repro.launch import emulate
+
+    rc = emulate.main(["--model", "bert-large", "--batch", "16", "--fast",
+                       "--steps", "1"])
+    assert rc == 0
+    assert "engine:" in capsys.readouterr().out
