@@ -1,16 +1,23 @@
-"""Planner engine benchmark: seed scalar co-optimizer vs the batched engine.
+"""Planner engine benchmark: scalar oracle vs batched enumeration vs exact DP.
 
 For each merge depth, times ``planner.solve`` and records plan quality; where
-both engines run (shallow depths) it asserts they return the *identical*
-plan.  The scalar engine is only timed at depths where it is tractable —
-the batched engine is what makes ``merge_to`` >= 14 usable at all.  Results
-are also written to ``BENCH_planner.json`` at the repo root so the planner
-perf trajectory is tracked from this PR onward.
+several engines run the same depth it cross-checks them.  The scalar engine
+is only timed at depths where it is tractable, the batched engine where the
+2^(L-1) partition space stays interactive, and the DP engine everywhere —
+including ``merge_to=None`` (full layer depth, L=26 for bert-large), the
+regime only the DP reaches.  Full runs refresh the committed
+``BENCH_planner.json`` at the repo root; ``--fast`` (CI smoke) runs write
+``BENCH_planner_fast.json`` instead, so the tracked perf trajectory is never
+clobbered by a smoke run (CI uploads both spellings as artifacts).
 
     PYTHONPATH=src python -m benchmarks.planner_bench [--fast] [--check]
 
-``--check`` (CI smoke guard) exits non-zero when the engines diverge or the
-batched engine is less than 2x faster than scalar at the comparison depth.
+``--check`` (CI smoke guard) exits non-zero when
+  * batch and scalar diverge at any shared depth (they must be identical),
+  * the batched engine is less than 2x faster than scalar,
+  * the DP engine's objective is *worse* than the batch engine's at any
+    shared depth, or worse at full depth than batch at its deepest depth —
+    the DP is exact, so "dp ever worse" is an optimality regression.
 """
 from __future__ import annotations
 
@@ -26,19 +33,29 @@ from repro.serverless.platform import AWS_LAMBDA
 MODEL = "bert-large"
 ALPHA = ALPHA_PAIRS[1]
 M = 16
-OUT_JSON = os.path.join(
-    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-    "BENCH_planner.json")
+# full runs refresh the committed perf-trajectory file; fast (CI-smoke) runs
+# write a sibling artifact so `--check` never clobbers the tracked numbers
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_REPO_ROOT, "BENCH_planner.json")
+OUT_JSON_FAST = os.path.join(_REPO_ROOT, "BENCH_planner_fast.json")
+# the dp engine may beat batch outright (it is exact where batch's CD is a
+# heuristic) but must never be worse; the band absorbs the ~1e-13 float
+# association difference between the engines' accumulation orders
+DP_RTOL = 1e-9
 
 # scalar is O(2^L) evaluate calls: ~seconds at merge_to=8, minutes at 10,
-# hopeless beyond — the batched engine runs every depth
+# hopeless beyond; batch prunes but still enumerates 2^(L-1) partitions —
+# the hierarchical merge keeps many near-optimal partitions alive, so its
+# practical ceiling is ~14; the DP runs every depth including None (= full)
 SCALAR_DEPTHS_FULL = (8, 10)
-BATCH_DEPTHS_FULL = (8, 10, 14, 16, 18)
+BATCH_DEPTHS_FULL = (8, 10, 14)
+DP_DEPTHS_FULL = (8, 10, 14, 16, None)
 SCALAR_DEPTHS_FAST = (8,)
-BATCH_DEPTHS_FAST = (8, 10, 14)
+BATCH_DEPTHS_FAST = (8, 10)
+DP_DEPTHS_FAST = (8, 10, None)
 
 
-def _solve(engine: str, merge_to: int):
+def _solve(engine: str, merge_to):
     prof = paper_model_profile(MODEL, AWS_LAMBDA)
     t0 = time.time()
     r = planner.solve(prof, AWS_LAMBDA, alpha=ALPHA, total_micro_batches=M,
@@ -47,31 +64,33 @@ def _solve(engine: str, merge_to: int):
     return r, dt
 
 
+def _row(engine: str, merge_to, r, dt) -> dict:
+    return {
+        "bench": "planner", "engine": engine,
+        "merge_to": "full" if merge_to is None else merge_to,
+        "seconds": round(dt, 3), "objective": r.objective,
+        "t_iter": round(r.evaluation.t_iter, 4),
+        "c_iter": round(r.evaluation.c_iter, 6),
+        "stages": sum(r.config.x) + 1, "d": r.config.d,
+    }
+
+
 def rows(fast: bool = False):
     scalar_depths = SCALAR_DEPTHS_FAST if fast else SCALAR_DEPTHS_FULL
     batch_depths = BATCH_DEPTHS_FAST if fast else BATCH_DEPTHS_FULL
+    dp_depths = DP_DEPTHS_FAST if fast else DP_DEPTHS_FULL
     out = []
     scalar_at = {}
     for mt in scalar_depths:
         r, dt = _solve("scalar", mt)
         scalar_at[mt] = (r, dt)
-        out.append({
-            "bench": "planner", "engine": "scalar", "merge_to": mt,
-            "seconds": round(dt, 3), "objective": r.objective,
-            "t_iter": round(r.evaluation.t_iter, 4),
-            "c_iter": round(r.evaluation.c_iter, 6),
-            "stages": sum(r.config.x) + 1, "d": r.config.d,
-        })
+        out.append(_row("scalar", mt, r, dt))
     base_obj = None
+    batch_at = {}
     for mt in batch_depths:
         r, dt = _solve("batch", mt)
-        row = {
-            "bench": "planner", "engine": "batch", "merge_to": mt,
-            "seconds": round(dt, 3), "objective": r.objective,
-            "t_iter": round(r.evaluation.t_iter, 4),
-            "c_iter": round(r.evaluation.c_iter, 6),
-            "stages": sum(r.config.x) + 1, "d": r.config.d,
-        }
+        batch_at[mt] = (r, dt)
+        row = _row("batch", mt, r, dt)
         if mt in scalar_at:
             rs, dts = scalar_at[mt]
             row["identical_plan"] = (r.config == rs.config
@@ -82,29 +101,46 @@ def rows(fast: bool = False):
         # plan-quality delta vs the shallowest batched depth (negative = better)
         row["quality_delta"] = round(r.objective / base_obj - 1, 6)
         out.append(row)
-    if not fast:  # the tracked perf-trajectory file records full runs only
-        _write_json(out, fast)
+    deepest_batch = batch_at[max(batch_at)][0]
+    for mt in dp_depths:
+        r, dt = _solve("dp", mt)
+        row = _row("dp", mt, r, dt)
+        # vs batch at the same depth (or its deepest depth for the depths
+        # only dp reaches): dp is exact — it must never be worse
+        rb, dtb = batch_at.get(mt, (deepest_batch, None))
+        row["dp_not_worse_than_batch"] = bool(
+            r.objective <= rb.objective * (1 + DP_RTOL))
+        if dtb is not None:
+            row["speedup_vs_batch"] = round(dtb / max(dt, 1e-9), 1)
+        row["quality_delta"] = round(r.objective / base_obj - 1, 6)
+        out.append(row)
+    _write_json(out, fast)
     return out
 
 
 def _write_json(out, fast: bool) -> None:
     cmp_rows = [r for r in out if r.get("speedup_vs_scalar") is not None]
+    dp_rows = [r for r in out if r["engine"] == "dp"]
+    dp_full = [r for r in dp_rows if r["merge_to"] == "full"]
     summary = {
         "model": MODEL, "alpha": list(ALPHA), "micro_batches": M, "fast": fast,
         "max_speedup_vs_scalar": max((r["speedup_vs_scalar"] for r in cmp_rows),
                                      default=None),
         "all_plans_identical": all(r["identical_plan"] for r in cmp_rows),
+        "dp_never_worse": all(r["dp_not_worse_than_batch"] for r in dp_rows),
+        "dp_full_depth_seconds": dp_full[0]["seconds"] if dp_full else None,
         "best_quality_delta": min(r["quality_delta"] for r in out
                                   if "quality_delta" in r),
         "rows": out,
     }
-    with open(OUT_JSON, "w") as f:
+    with open(OUT_JSON_FAST if fast else OUT_JSON, "w") as f:
         json.dump(summary, f, indent=2)
         f.write("\n")
 
 
 def check(fast: bool = True) -> int:
-    """CI smoke: fail on engine divergence or a >2x perf regression."""
+    """CI smoke: fail on engine divergence, a >2x perf regression, or a
+    dp-vs-batch optimality regression."""
     rs = rows(fast)
     cmp_rows = [r for r in rs if r.get("speedup_vs_scalar") is not None]
     ok = True
@@ -119,6 +155,15 @@ def check(fast: bool = True) -> int:
             print(f"check: batched engine only {r['speedup_vs_scalar']}x faster "
                   f"at merge_to={r['merge_to']} (>=2x required)")
             ok = False
+    dp_rows = [r for r in rs if r["engine"] == "dp"]
+    if not dp_rows:
+        print("check: no dp rows produced")
+        ok = False
+    for r in dp_rows:
+        if not r["dp_not_worse_than_batch"]:
+            print(f"check: dp objective WORSE than batch at "
+                  f"merge_to={r['merge_to']}: {r} (optimality regression)")
+            ok = False
     for r in rs:
         print(",".join(f"{k}={v}" for k, v in r.items()))
     print("check:", "OK" if ok else "FAILED")
@@ -128,9 +173,9 @@ def check(fast: bool = True) -> int:
 def main(argv=None):
     import argparse
 
-    ap = argparse.ArgumentParser(description="batch-vs-scalar planner bench")
+    ap = argparse.ArgumentParser(description="scalar/batch/dp planner bench")
     ap.add_argument("--check", action="store_true",
-                    help="CI gate: parity + >=2x speedup")
+                    help="CI gate: parity + >=2x speedup + dp optimality")
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--full", action="store_true",
                     help="with --check: run the full (non-fast) sweep")
@@ -139,7 +184,7 @@ def main(argv=None):
         raise SystemExit(check(fast=not args.full))
     for r in rows(args.fast):
         print(",".join(f"{k}={v}" for k, v in r.items()))
-    print(f"\nwrote {OUT_JSON}")
+    print(f"\nwrote {OUT_JSON_FAST if args.fast else OUT_JSON}")
 
 
 if __name__ == "__main__":

@@ -41,7 +41,10 @@ def _headline(name: str, rows: list) -> str:
         cmp_rows = [x for x in rows if x.get("speedup_vs_scalar") is not None]
         sp = max((x["speedup_vs_scalar"] for x in cmp_rows), default="n/a")
         same = all(x["identical_plan"] for x in cmp_rows)
-        return f"batch_speedup={sp};identical_plans={same}"
+        dp_ok = all(x["dp_not_worse_than_batch"] for x in rows
+                    if x["engine"] == "dp")
+        return (f"batch_speedup={sp};identical_plans={same};"
+                f"dp_never_worse={dp_ok}")
     if name == "collectives":
         return f"bidi_link_reduction={rows[0]['link_reduction']}"
     return f"rows={len(rows)}"

@@ -89,7 +89,7 @@ class DeploymentPlan:
     c_iter: float                 # solver-predicted cost ($ / iteration)
     objective: float              # a1 * c_iter + a2 * t_iter
     solver: str                   # cd | exhaustive | tpdmp | bayes | manual
-    engine: str                   # batch | scalar | -
+    engine: str                   # batch | scalar | dp | -
     solve_seconds: float          # provenance only; excluded from the hash
     version: int = SCHEMA_VERSION
 
@@ -108,10 +108,15 @@ class DeploymentPlan:
 
     @property
     def content_hash(self) -> str:
-        """Stable digest of the plan's *content* (identical decisions hash
-        identically; ``solve_seconds`` is provenance and excluded)."""
+        """Stable digest of the plan's *content*: identical decisions hash
+        identically regardless of which solver/engine found them or how long
+        the solve took — ``solver``, ``engine`` and ``solve_seconds`` are
+        provenance, not content, and are excluded (a dp-engine plan and a
+        batch-engine plan that chose the same (x, z, d, M) are the same
+        deployment)."""
         d = self._as_dict()
-        d.pop("solve_seconds")
+        for prov in ("solve_seconds", "solver", "engine"):
+            d.pop(prov)
         blob = json.dumps(d, sort_keys=True, separators=(",", ":"))
         return hashlib.sha256(blob.encode()).hexdigest()[:16]
 

@@ -84,7 +84,7 @@ class Session:
 
     # ------------------------------------------------------------ workflow ②
     def plan(self, *, alpha: Tuple[float, float] = DEFAULT_ALPHA,
-             merge_to: int = planner.DEFAULT_MERGE_TO,
+             merge_to: Optional[int] = planner.DEFAULT_MERGE_TO,
              solver: str = "cd", engine: str = "batch",
              d_options: Sequence[int] = planner.DEFAULT_D_OPTIONS,
              max_stages: Optional[int] = None, rounds: int = 100,
@@ -93,6 +93,9 @@ class Session:
 
         ``solver``: ``cd`` / ``exhaustive`` (the MIQP-style co-optimizer),
         ``tpdmp`` or ``bayes`` (the §5.6 comparison algorithms).
+        ``engine``: ``batch`` / ``scalar`` (enumeration, identical plans) or
+        ``dp`` (the exact cut-point DP — pair it with ``merge_to=None`` to
+        plan at full layer depth).
         """
         prof = self._require_profile()
         M = self.total_micro_batches
@@ -105,9 +108,12 @@ class Session:
             r = planner.tpdmp_solve(prof, self.platform, engine=engine,
                                     **common)
         elif solver == "bayes":
+            if engine != "batch":
+                raise ValueError(
+                    f"solver='bayes' has no {engine!r} engine: it samples "
+                    "through the batched kernel only (engine='batch')")
             r = planner.bayes_solve(prof, self.platform, rounds=rounds,
                                     seed=seed, **common)
-            engine = "batch"
         else:
             raise ValueError(f"unknown solver {solver!r}")
         if r is None:

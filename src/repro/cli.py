@@ -66,7 +66,12 @@ def _add_solver_args(p: argparse.ArgumentParser):
                         "(a1=1; default 2^16 * 1e-9)")
     p.add_argument("--solver", default="cd",
                    choices=("cd", "exhaustive", "tpdmp", "bayes"))
-    p.add_argument("--engine", default="batch", choices=("batch", "scalar"))
+    p.add_argument("--engine", default="batch",
+                   choices=("batch", "scalar", "dp"),
+                   help="search engine: batch/scalar enumerate the merged "
+                        "partition space, dp is the exact cut-point DP "
+                        "(defaults to full layer depth unless --merge-to "
+                        "or --fast bounds it)")
     p.add_argument("--max-stages", type=int, default=None)
     p.add_argument("--fast", action="store_true",
                    help="CI-sized search (merge_to=6, d in {1,2,4})")
@@ -86,12 +91,24 @@ def _plan_kw(args) -> dict:
     from repro.core import planner
 
     alpha2 = 2**16 * 1e-9 if args.alpha2 is None else args.alpha2
+    if args.solver == "bayes" and args.engine != "batch":
+        # bayes is a random sampler over the batched kernel; silently running
+        # it instead of the requested scalar/dp engine would mislead
+        raise SystemExit(
+            f"--solver bayes only runs on the batch kernel; drop "
+            f"--engine {args.engine}")
     kw = dict(alpha=(1.0, alpha2), solver=args.solver,
               engine=args.engine)
     if args.solver in ("cd", "exhaustive") and args.max_stages is not None:
         kw["max_stages"] = args.max_stages
-    kw["merge_to"] = args.merge_to if args.merge_to is not None \
-        else (_FAST["merge_to"] if args.fast else planner.DEFAULT_MERGE_TO)
+    if args.merge_to is not None:
+        kw["merge_to"] = args.merge_to
+    elif args.fast:
+        kw["merge_to"] = _FAST["merge_to"]
+    elif args.engine == "dp":
+        kw["merge_to"] = None          # exact DP: plan at full layer depth
+    else:
+        kw["merge_to"] = planner.DEFAULT_MERGE_TO
     if args.fast:
         kw["d_options"] = _FAST["d_options"]
     return kw
@@ -335,12 +352,19 @@ def _cmd_sweep(args) -> int:
         s = _make_session(args)
         prof = s.profile().model_profile
     M = s.total_micro_batches
-    merge_to = args.merge_to if args.merge_to is not None \
-        else (_FAST["merge_to"] if args.fast else 12)
+    if args.merge_to is not None:
+        merge_to = args.merge_to
+    elif args.fast:
+        merge_to = _FAST["merge_to"]
+    elif args.engine == "dp":
+        merge_to = None                # exact DP: sweep at full layer depth
+    else:
+        merge_to = 12
     print(f"model={args.model} params={prof.param_bytes/2**20:.0f}MB "
           f"layers={prof.L} global_batch={s.global_batch} micro_batches={M} "
-          f"merge_to={merge_to}")
-    plan_kw = dict(merge_to=merge_to)
+          f"merge_to={'full' if merge_to is None else merge_to} "
+          f"engine={args.engine}")
+    plan_kw = dict(merge_to=merge_to, engine=args.engine)
     if args.fast:
         plan_kw["d_options"] = _FAST["d_options"]
     results, saved = [], []
@@ -378,7 +402,7 @@ def _cmd_sweep(args) -> int:
         print(f"saved {len(saved)} plans to {args.save_dir}/")
 
     print("\nbaseline algorithms (same objective, alpha2=2^19e-9):")
-    base_merge = min(8, merge_to)
+    base_merge = 8 if merge_to is None else min(8, merge_to)
     for name in ("tpdmp", "bayes"):
         try:
             s.plan(alpha=(1.0, 2**19 * 1e-9), solver=name,
@@ -464,6 +488,10 @@ def main(argv: Optional[List[str]] = None) -> int:
                                      "baseline algorithms (paper §5)")
     _add_model_args(p)
     p.add_argument("--merge-to", type=int, default=None)
+    p.add_argument("--engine", default="batch",
+                   choices=("batch", "scalar", "dp"),
+                   help="planner engine for the sweep; dp sweeps exactly at "
+                        "full layer depth unless --merge-to bounds it")
     p.add_argument("--fast", action="store_true")
     p.add_argument("--save-dir", default=None,
                    help="save every swept plan JSON into this directory")

@@ -72,6 +72,41 @@ def suffix_max(u: np.ndarray) -> np.ndarray:
     return out
 
 
+def segment_sum_table(u: np.ndarray) -> np.ndarray:
+    """Sums of every contiguous segment of ``u`` along the last axis.
+
+    ``seg[..., lo, hi] = u[lo] + ... + u[hi]`` (zero where ``lo > hi``),
+    accumulated as ``seg[lo, hi] = seg[lo, hi - 1] + u[hi]`` — the same
+    per-element operation order as :func:`hat` restricted to one stage, so a
+    stage's entry is bit-identical to ``hat(u, x)[hi]`` for any partition in
+    which ``[lo, hi]`` is a stage (IEEE addition commutes, so growing the
+    segment on the right reproduces hat's fold exactly).  Batch-aware over
+    leading axes like :func:`hat`."""
+    u = np.asarray(u, dtype=np.float64)
+    L = u.shape[-1]
+    seg = np.zeros(u.shape[:-1] + (L, L), dtype=np.float64)
+    for hi in range(L):
+        seg[..., hi, hi] = u[..., hi]
+        if hi:
+            seg[..., :hi, hi] = seg[..., :hi, hi - 1] + u[..., hi, None]
+    return seg
+
+
+def segment_sum_table_rev(u: np.ndarray) -> np.ndarray:
+    """Like :func:`segment_sum_table` but folded from the right —
+    ``seg[lo, hi] = u[lo] + seg[lo + 1, hi]`` — matching :func:`tilde`'s
+    association, so a stage's entry is bit-identical to ``tilde(u, x)[lo]``
+    for any partition in which ``[lo, hi]`` is a stage."""
+    u = np.asarray(u, dtype=np.float64)
+    L = u.shape[-1]
+    seg = np.zeros(u.shape[:-1] + (L, L), dtype=np.float64)
+    for lo in range(L - 1, -1, -1):
+        seg[..., lo, lo] = u[..., lo]
+        if lo < L - 1:
+            seg[..., lo, lo + 1:] = u[..., lo, None] + seg[..., lo + 1, lo + 1:]
+    return seg
+
+
 def stage_ids(x: np.ndarray) -> np.ndarray:
     """Per-layer stage index for a batch of partitions: ``x`` is ``[..., L-1]``
     boundary bits, the result is ``[..., L]`` with values in ``[0, n_stages)``
@@ -153,14 +188,20 @@ class ModelProfile:
         return float(sum(l.param_bytes for l in self.layers))
 
 
-def merge_layers(profile: ModelProfile, target_L: int,
-                 criterion: str = "compute") -> ModelProfile:
-    """Greedy balanced merging (paper §4): contiguous layers are merged so the
-    chosen criterion (compute time / param size / activation size) is roughly
-    balanced across the ``target_L`` merged super-layers."""
+def merge_boundaries(profile: ModelProfile, target_L: int,
+                     criterion: str = "compute") -> List[int]:
+    """Group edges of the §4 layer merge: ``[0, b_1, ..., b_{k-1}, L]`` with
+    super-layer ``g`` spanning original layers ``[edges[g], edges[g+1])``.
+
+    Hierarchical: starting from one group, the heaviest splittable group is
+    repeatedly split at its most balanced interior point, so the boundary set
+    at depth ``k`` is by construction a superset of every shallower depth's.
+    Nested boundaries make the planner's search space grow monotonically with
+    merge depth — deeper merging can never lose a plan that a shallower depth
+    could express, which is what makes plan quality monotone in ``target_L``
+    (the seed's one-pass greedy did not nest; see the ROADMAP
+    merge-boundary item)."""
     ls = profile.layers
-    if len(ls) <= target_L:
-        return profile
     if criterion == "compute":
         w = np.array([np.mean(l.fwd_time) + np.mean(l.bwd_time) for l in ls])
     elif criterion == "param":
@@ -170,23 +211,35 @@ def merge_layers(profile: ModelProfile, target_L: int,
     else:
         raise ValueError(criterion)
     w = np.maximum(w, 1e-12)
-    total = w.sum()
-    per = total / target_L
-    groups: List[List[int]] = []
-    cur: List[int] = []
-    acc = 0.0
-    remaining_groups = target_L
-    for i in range(len(ls)):
-        cur.append(i)
-        acc += w[i]
-        remaining_layers = len(ls) - i - 1
-        if (acc >= per and remaining_groups > 1 and remaining_layers >= remaining_groups - 1):
-            groups.append(cur)
-            cur = []
-            acc = 0.0
-            remaining_groups -= 1
-    if cur:
-        groups.append(cur)
+    csum = np.concatenate([[0.0], np.cumsum(w)])
+    edges = [0, len(ls)]
+    while len(edges) - 1 < min(target_L, len(ls)):
+        # heaviest group with more than one layer; leftmost breaks ties
+        best_g, best_w = None, -np.inf
+        for g in range(len(edges) - 1):
+            gw = csum[edges[g + 1]] - csum[edges[g]]
+            if edges[g + 1] - edges[g] > 1 and gw > best_w:
+                best_g, best_w = g, gw
+        lo, hi = edges[best_g], edges[best_g + 1]
+        left = csum[lo + 1:hi] - csum[lo]     # weight left of each interior cut
+        total = csum[hi] - csum[lo]
+        k = int(np.argmin(np.maximum(left, total - left)))  # first minimizer
+        edges.insert(best_g + 1, lo + k + 1)
+    return edges
+
+
+def merge_layers(profile: ModelProfile, target_L: int,
+                 criterion: str = "compute") -> ModelProfile:
+    """Balanced hierarchical merging (paper §4): contiguous layers are merged
+    so the chosen criterion (compute time / param size / activation size) is
+    roughly balanced across the ``target_L`` merged super-layers, with
+    boundaries that nest across depths (see :func:`merge_boundaries`)."""
+    ls = profile.layers
+    if len(ls) <= target_L:
+        return profile
+    edges = merge_boundaries(profile, target_L, criterion)
+    groups: List[List[int]] = [list(range(edges[g], edges[g + 1]))
+                               for g in range(len(edges) - 1)]
 
     def merge_group(idx: List[int]) -> LayerProfile:
         sub = [ls[i] for i in idx]

@@ -38,6 +38,8 @@ from repro.core.partition import (
     hat,
     highest_layers,
     lowest_layers,
+    segment_sum_table,
+    segment_sum_table_rev,
     suffix_max,
     suffix_sum,
     tilde,
@@ -143,6 +145,41 @@ def perf_tables(profile: ModelProfile, platform: Platform) -> PerfTables:
         Tf_beta=Tf_beta, Tb_beta=Tb_beta,
         s=arr["s"], a=arr["a"], o=arr["o"], g=arr["g"], monotone=monotone,
     )
+
+
+@dataclass(frozen=True)
+class SegmentTables:
+    """Per-(lo, hi[, mem-option]) stage aggregates for one (profile, platform)
+    pair: every contiguous layer segment's compute/byte sums, materialized in
+    O(L^2·J) once and cached.  This is what the planner's DP engine reads —
+    a candidate stage ``[lo, hi]`` at memory level ``j`` costs one table
+    lookup instead of a per-layer reduction.
+
+    Association discipline: ``a_hat``/``s_hat`` reproduce :func:`hat`'s fold
+    bit-for-bit (they feed the eq (3b) memory threshold, where a one-ulp
+    disagreement with the scalar oracle could flip feasibility) and
+    ``s_tilde`` reproduces :func:`tilde`'s (it feeds the eq (1)/(2) sync
+    terms).  ``f``/``b`` use the hat fold for the per-stage compute sums."""
+
+    f: np.ndarray        # [L, L, J] beta-scaled forward compute sum of [lo..hi]
+    b: np.ndarray        # [L, L, J] beta-scaled backward compute sum
+    a_hat: np.ndarray    # [L, L] activation bytes (hat association, eq 3b)
+    s_hat: np.ndarray    # [L, L] parameter bytes (hat association, eq 3b)
+    s_tilde: np.ndarray  # [L, L] parameter bytes (tilde association, sync)
+
+
+@functools.lru_cache(maxsize=256)
+def segment_tables(profile: ModelProfile, platform: Platform) -> SegmentTables:
+    T = perf_tables(profile, platform)
+    # fold per memory option: [J, L] -> [J, L, L] -> [L, L, J]
+    f = np.moveaxis(segment_sum_table(np.ascontiguousarray(T.Tf_beta.T)), 0, -1)
+    b = np.moveaxis(segment_sum_table(np.ascontiguousarray(T.Tb_beta.T)), 0, -1)
+    a_hat = segment_sum_table(T.a)
+    s_hat = segment_sum_table(T.s)
+    s_tilde = segment_sum_table_rev(T.s)
+    for t in (f, b, a_hat, s_hat, s_tilde):
+        t.setflags(write=False)
+    return SegmentTables(f=f, b=b, a_hat=a_hat, s_hat=s_hat, s_tilde=s_tilde)
 
 
 # ------------------------------------------------------------- scalar oracle

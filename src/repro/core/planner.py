@@ -7,7 +7,7 @@ with layer merging (paper §4) + exhaustive enumeration over (d, partition)
 ``method='exhaustive'`` cross-checks the heuristic on small instances (the
 tests assert they agree).
 
-Two engines drive the search:
+Three engines drive the search:
 
   * ``engine='scalar'`` — the seed implementation: one ``perfmodel.evaluate``
     call per candidate.  Kept as the reference the batched engine is
@@ -23,9 +23,17 @@ Two engines drive the search:
     default ``merge_to`` sit at 14 instead of the seed's 10.  On monotone
     platforms (more memory never slower) the batch engine additionally
     prunes partitions by an objective lower bound (t at max memory, cost at
-    min-feasible memory), which keeps ``merge_to=16+`` interactive; the
-    bound only ever discards partitions that provably cannot tie the
-    incumbent, so exactness is preserved.
+    min-feasible memory); the bound only ever discards partitions that
+    provably cannot tie the incumbent, so exactness of the CD-per-partition
+    scheme is preserved.
+  * ``engine='dp'`` (:func:`dp_solve`) — the exact dynamic program over
+    stage cut-points: per-stage costs are (lo, hi, mem-level)-separable on
+    the precomputed ``perfmodel.segment_tables`` except for the cross-stage
+    boundary transfers, which the DP carries as a one-level boundary state;
+    the pipeline bottleneck (max) terms ride along as a Pareto-valued state,
+    so the result is *provably optimal* per (d, M) — no CD heuristic, no
+    2^(L-1) enumeration.  The only engine for which ``merge_to=None`` (full
+    layer depth) is tractable.
 
 Also implements the two comparison algorithms of §5.6:
   * ``tpdmp_solve`` — throughput-maximizing partition under fixed resources,
@@ -55,9 +63,13 @@ from repro.core.perfmodel import (
     Config,
     Evaluation,
     PerfTables,
+    SegmentTables,
     evaluate,
     evaluate_batch,
     perf_tables,
+    segment_tables,
+    sync_time_nonpipelined,
+    sync_time_pipelined,
 )
 from repro.serverless.platform import GB, Platform
 
@@ -74,6 +86,11 @@ class PlanResult:
     objective: float
     solve_seconds: float
     profile: ModelProfile  # (merged) profile the config indexes into
+
+
+def _merged(profile: ModelProfile, merge_to: Optional[int]) -> ModelProfile:
+    """merge_to=None means plan at full layer depth (no merging)."""
+    return profile if merge_to is None else merge_layers(profile, merge_to)
 
 
 def _expand_z(stage_mem: Sequence[int], x: Sequence[int], L: int) -> tuple:
@@ -181,7 +198,7 @@ def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
                   merge_to, max_stages, method, pipelined_sync):
     t0 = time.time()
     a1, a2 = alpha
-    prof = merge_layers(profile, merge_to)
+    prof = _merged(profile, merge_to)
     L = prof.L
     J = len(platform.memory_options)
     best: Optional[PlanResult] = None
@@ -388,7 +405,7 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
                  merge_to, max_stages, method, pipelined_sync):
     t0 = time.time()
     a1, a2 = alpha
-    prof = merge_layers(profile, merge_to)
+    prof = _merged(profile, merge_to)
     L = prof.L
     M = total_micro_batches
     tables = perf_tables(prof, platform)
@@ -491,6 +508,369 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
     return PlanResult(cfg, ev, ev.objective(a1, a2), time.time() - t0, prof)
 
 
+# ----------------------------------------------------------------- dp engine
+# Finalists within this relative band of the DP optimum are re-scored through
+# the scalar oracle: the DP accumulates stage-at-a-time while `evaluate` folds
+# whole-chain suffixes, so their float association differs by ~1e-13 relative
+# — re-ranking a 1e-9 band through `evaluate` makes the returned plan the
+# oracle-arithmetic argmin even across such near-ties.
+_DP_FINALIST_RTOL = 1e-9
+_DP_FINALIST_CAP = 64          # max finalists re-scored per (d, state sweep)
+_INIT_ROW = -1                 # back-pointer sentinel: row starts a suffix
+
+
+@dataclass(frozen=True)
+class _DpTables:
+    """Per-(profile, platform, d) working tables for the cut-point DP."""
+
+    feas: np.ndarray       # [L, L, J] stage [lo, hi] fits at mem level j
+    ts: np.ndarray         # [L, L, J] per-stage sync time (eq 1/2; 0 if d==1)
+    cutf: np.ndarray       # [L, J] one side of the fwd boundary comm at cut k
+    cutb: np.ndarray       # [L, J] one side of the bwd boundary comm at cut k
+    fmin_pre: np.ndarray   # [L+1] lower bound on fwd compute of layers < p
+    bmin_pre: np.ndarray   # [L+1] same for bwd compute
+    cutf_min: np.ndarray   # [L] min over allowed j of cutf[k]
+    cutb_min: np.ndarray   # [L] min over allowed j of cutb[k]
+    minmem: np.ndarray     # [L+1] min total stage memory covering layers < p
+
+
+def _dp_tables(tables: PerfTables, segs: SegmentTables, d: int, mu: int,
+               pipelined_sync: bool, j_only: Optional[int]) -> _DpTables:
+    L, J = tables.L, tables.J
+    W, t_lat = tables.W, tables.t_lat
+    sync_f = 4 - 2 * (1 if d == 1 else 0)
+    # eq (3b), same operation order as the scalar oracle's threshold
+    need = mu * segs.a_hat + segs.s_hat * sync_f + tables.base_memory
+    feas = need[:, :, None] <= tables.mem_opts[None, None, :]
+    if d > 1:
+        # the scalar helpers broadcast over the [L, L, 1] / [J] operands with
+        # the oracle's exact operation order (d > 1 here, so no early return)
+        sync_fn = (sync_time_pipelined if pipelined_sync
+                   else sync_time_nonpipelined)
+        ts = sync_fn(segs.s_tilde[:, :, None], W, d, t_lat)
+    else:
+        ts = np.zeros((L, L, J))
+    cutf = np.zeros((L, J))
+    cutb = np.zeros((L, J))
+    if L > 1:
+        cutf[1:] = tables.o[:L - 1, None] / W[None, :] + t_lat
+        cutb[1:] = tables.g[1:, None] / W[None, :] + t_lat
+    if j_only is not None:
+        mask = np.zeros(J, dtype=bool)
+        mask[j_only] = True
+        feas = feas & mask[None, None, :]
+        jcols = [j_only]
+    else:
+        jcols = list(range(J))
+    # ---- admissible completion bounds for layers [0, p): per-layer best-case
+    # compute, the cheapest memory cover (a tiny DP over segment floors), and
+    # the cheapest possible boundary terms of the one cut that is certain
+    f_min = tables.Tf_beta[:, jcols].min(axis=1)
+    b_min = tables.Tb_beta[:, jcols].min(axis=1)
+    fmin_pre = np.concatenate([[0.0], np.cumsum(f_min)])
+    bmin_pre = np.concatenate([[0.0], np.cumsum(b_min)])
+    cutf_min = cutf[:, jcols].min(axis=1)
+    cutb_min = cutb[:, jcols].min(axis=1)
+    seg_mem = np.where(feas.any(-1),
+                       tables.mem_opts[feas.argmax(-1)], np.inf)  # [L, L]
+    minmem = np.full(L + 1, np.inf)
+    minmem[0] = 0.0
+    for q in range(1, L + 1):
+        minmem[q] = np.min(minmem[:q] + seg_mem[:q, q - 1])
+    return _DpTables(feas=feas, ts=ts, cutf=cutf, cutb=cutb,
+                     fmin_pre=fmin_pre, bmin_pre=bmin_pre,
+                     cutf_min=cutf_min, cutb_min=cutb_min, minmem=minmem)
+
+
+def _nondominated(V: np.ndarray) -> np.ndarray:
+    """Indices of the non-dominated rows of ``V`` (componentwise minimize),
+    keeping one representative of every duplicate row.  Exactness of the DP
+    only needs soundness here: a dropped row is always covered by a kept row
+    that is <= it in every component (dominance is transitive, so comparing
+    against *all* lexicographically earlier rows — kept or not — is enough).
+    """
+    n = len(V)
+    if n <= 1:
+        return np.arange(n)
+    Vu, first = np.unique(V, axis=0, return_index=True)   # lex-sorted rows
+    m = len(Vu)
+    # a dominating row always sorts lexicographically earlier, so sweep in
+    # lex order comparing each chunk only against the kept set so far (any
+    # dominated-but-dropped earlier row has a kept dominator by transitivity)
+    # plus its own chunk-internal predecessors — O(m * kept) instead of O(m^2)
+    kept_idx = [0]
+    P = Vu[0:1]
+    step = 256
+    for lo in range(1, m, step):
+        hi = min(lo + step, m)
+        C = Vu[lo:hi]
+        dom = np.all(P[None, :, :] <= C[:, None, :], axis=-1).any(axis=1)
+        intra = np.all(C[None, :, :] <= C[:, None, :], axis=-1)
+        intra &= np.arange(lo, hi)[None, :] < np.arange(lo, hi)[:, None]
+        dom |= intra.any(axis=1)
+        new = np.nonzero(~dom)[0]
+        if len(new):
+            kept_idx.extend((lo + new).tolist())
+            P = np.concatenate([P, C[new]])
+    return np.sort(first[np.array(kept_idx)])
+
+
+def _dp_candidates(tables: PerfTables, segs: SegmentTables, d: int, mu: int,
+                   a1: float, a2: float, pipelined_sync: bool,
+                   max_stages: Optional[int], j_only: Optional[int] = None,
+                   incumbent: float = np.inf):
+    """Exact DP over stage cut-points for one data-parallel degree.
+
+    Suffix plans are built right to left.  A state is ``(p, j)`` — the suffix
+    covers layers ``[p, L-1]`` and its leftmost stage runs at memory level
+    ``j`` (the boundary state: the next cut's download/upload terms need it).
+    A state's value is the Pareto set of 6-vectors
+
+        (msum, fadd, fmax, bsum, bmax, worst)
+
+    = (suffix stage-memory sum, additive forward time, forward per-round
+    bottleneck delta_f candidates, additive backward suffix time, backward
+    bottleneck candidates, max over suffix stages of eq (7)'s backward
+    completion + sync).  The final objective and every transition are
+    monotone nondecreasing in all six components, so componentwise dominance
+    pruning is exact; an admissible completion bound additionally prunes
+    against ``incumbent`` (any achievable objective, e.g. from the CD
+    heuristic) without ever discarding a potential optimum.  Returns
+    ``(finalists, best_dp_objective)`` where finalists are ``(x, z)`` tuples
+    within ``_DP_FINALIST_RTOL`` of the DP optimum."""
+    L, J = tables.L, tables.J
+    mem = tables.mem_opts
+    t = _dp_tables(tables, segs, d, mu, pipelined_sync, j_only)
+    jcols = [j_only] if j_only is not None else list(range(J))
+    b_cost = a1 * tables.price_per_gb_s * d / GB
+    guard = incumbent * (1 + _DP_FINALIST_RTOL)
+    use_count = max_stages is not None
+    states = {}
+
+    for p in range(L - 1, -1, -1):
+        for j in jcols:
+            blocks = []
+            if t.feas[p, L - 1, j]:
+                fc = segs.f[p, L - 1, j]
+                bc = segs.b[p, L - 1, j]
+                worst = bc + (mu - 1) * bc + t.ts[p, L - 1, j]
+                blocks.append((
+                    np.array([[mem[j], fc, fc, bc, bc, worst]]),
+                    np.ones(1, dtype=np.int64),
+                    np.array([[L, 0, _INIT_ROW]], dtype=np.int64)))
+            for i in range(p + 1, L):
+                if not t.feas[p, i - 1, j]:
+                    continue
+                fc = segs.f[p, i - 1, j]
+                bc = segs.b[p, i - 1, j]
+                cf_u = t.cutf[i, j]          # this stage uploads its output
+                cb_d = t.cutb[i, j]          # ... and downloads the grad back
+                tsn = t.ts[p, i - 1, j]
+                for jl in jcols:
+                    parent = states.get((i, jl))
+                    if parent is None:
+                        continue
+                    Vp, cp, _ = parent
+                    cf_d = t.cutf[i, jl]     # right stage downloads the fwd
+                    cb_u = t.cutb[i, jl]     # ... and uploads the bwd grad
+                    n = len(Vp)
+                    V = np.empty((n, 6))
+                    V[:, 0] = Vp[:, 0] + mem[j]
+                    V[:, 1] = Vp[:, 1] + (fc + cf_u + cf_d)
+                    V[:, 2] = np.maximum(Vp[:, 2], max(fc, cf_u, cf_d))
+                    V[:, 3] = Vp[:, 3] + (bc + cb_u + cb_d)
+                    V[:, 4] = np.maximum(Vp[:, 4], max(bc, cb_u, cb_d))
+                    V[:, 5] = np.maximum(
+                        Vp[:, 5], V[:, 3] + (mu - 1) * V[:, 4] + tsn)
+                    cnt = cp + 1
+                    bp = np.column_stack([
+                        np.full(n, i, dtype=np.int64),
+                        np.full(n, jl, dtype=np.int64),
+                        np.arange(n, dtype=np.int64)])
+                    if use_count:
+                        ok = cnt <= max_stages - (1 if p > 0 else 0)
+                        if not ok.all():
+                            V, cnt, bp = V[ok], cnt[ok], bp[ok]
+                        if len(V) == 0:
+                            continue
+                    blocks.append((V, cnt, bp))
+            if not blocks:
+                continue
+            if p > 0 and not np.isfinite(t.minmem[p]):
+                continue            # layers [0, p) cannot be covered at all
+            V = np.vstack([b[0] for b in blocks])
+            cnt = np.concatenate([b[1] for b in blocks])
+            bp = np.vstack([b[2] for b in blocks])
+            if p > 0:
+                # admissible completion bound: remaining layers at best-case
+                # compute/memory plus the guaranteed cut at p (its j-side
+                # terms are exact — j is this state's boundary level)
+                f_pre = t.fmin_pre[p] + t.cutf[p, j] + t.cutf_min[p]
+                b_pre = t.bmin_pre[p] + t.cutb[p, j] + t.cutb_min[p]
+                t_lb = (V[:, 1] + f_pre + (mu - 1) * V[:, 2]
+                        + np.maximum(V[:, 5],
+                                     V[:, 3] + b_pre + (mu - 1) * V[:, 4]))
+                obj_lb = (a2 + b_cost * (V[:, 0] + t.minmem[p])) * t_lb
+                ok = obj_lb <= guard
+                if not ok.all():
+                    V, cnt, bp = V[ok], cnt[ok], bp[ok]
+                if len(V) == 0:
+                    continue
+            key = np.column_stack([V, cnt]) if use_count else V
+            idx = _nondominated(key)
+            V, cnt, bp = V[idx], cnt[idx], bp[idx]
+            states[(p, j)] = (V, cnt, bp)
+            if p > 0:
+                # single-stage completions are real plans: refresh the
+                # incumbent so later (deeper-prefix) states prune harder
+                for jc in jcols:
+                    if not t.feas[0, p - 1, jc]:
+                        continue
+                    if use_count and not (cnt + 1 <= max_stages).any():
+                        continue
+                    rows = (slice(None) if not use_count
+                            else cnt + 1 <= max_stages)
+                    Vr = V[rows]
+                    bsum_c = Vr[:, 3] + (segs.b[0, p - 1, jc]
+                                         + t.cutb[p, j] + t.cutb[p, jc])
+                    bmax_c = np.maximum(Vr[:, 4], max(
+                        segs.b[0, p - 1, jc], t.cutb[p, j], t.cutb[p, jc]))
+                    worst_c = np.maximum(
+                        Vr[:, 5],
+                        bsum_c + (mu - 1) * bmax_c + t.ts[0, p - 1, jc])
+                    fadd_c = Vr[:, 1] + (segs.f[0, p - 1, jc]
+                                         + t.cutf[p, jc] + t.cutf[p, j])
+                    fmax_c = np.maximum(Vr[:, 2], max(
+                        segs.f[0, p - 1, jc], t.cutf[p, jc], t.cutf[p, j]))
+                    t_c = fadd_c + (mu - 1) * fmax_c + worst_c
+                    obj_c = (a2 + b_cost * (Vr[:, 0] + mem[jc])) * t_c
+                    low = float(obj_c.min())
+                    if low < incumbent:
+                        incumbent = low
+                        guard = incumbent * (1 + _DP_FINALIST_RTOL)
+
+    # ---- collect full plans, keep the near-tie band, walk back-pointers
+    done = []
+    for j in jcols:
+        st = states.get((0, j))
+        if st is None:
+            continue
+        V = st[0]
+        obj = ((a2 + b_cost * V[:, 0])
+               * (V[:, 1] + (mu - 1) * V[:, 2] + V[:, 5]))
+        for r in np.argsort(obj, kind="stable"):
+            done.append((float(obj[r]), j, int(r)))
+    if not done:
+        return [], np.inf
+    done.sort()
+    best = done[0][0]
+    finalists = []
+    for obj, j, r in done[:_DP_FINALIST_CAP]:
+        if obj > best * (1 + _DP_FINALIST_RTOL):
+            break
+        finalists.append(_dp_walk(states, L, j, r))
+    return finalists, best
+
+
+def _dp_walk(states, L: int, j: int, row: int) -> Tuple[tuple, tuple]:
+    """Reconstruct (x, z) from the back-pointer chain of one final row."""
+    x = [0] * (L - 1)
+    z = [0] * L
+    p = 0
+    while True:
+        _, _, bp = states[(p, j)]
+        pi, pj, pr = (int(v) for v in bp[row])
+        hi = L - 1 if pr == _INIT_ROW else pi - 1
+        for k in range(p, hi + 1):
+            z[k] = j
+        if pr == _INIT_ROW:
+            break
+        x[pi - 1] = 1
+        p, j, row = pi, pj, pr
+    return tuple(x), tuple(z)
+
+
+def _dp_seed_incumbent(prof, platform, tables, d, mu, M, a1, a2,
+                       pipelined_sync):
+    """A cheap achievable objective to prime the DP's completion-bound
+    pruning: balanced compute splits at every stage count (the hierarchical
+    merge boundaries restricted to full depth), floor/max memory per split,
+    then the multi-start CD polish on the best split.  Purely an upper bound
+    — the DP stays exact regardless of its quality."""
+    L = prof.L
+    w = tables.Tf_beta.mean(axis=1) + tables.Tb_beta.mean(axis=1)
+    csum = np.cumsum(w)
+    total = csum[-1]
+    best_obj, best_x = np.inf, None
+    for S in range(1, L + 1):
+        cuts = sorted({int(np.searchsorted(csum, total * k / S))
+                       for k in range(1, S)} - {L - 1})
+        x = tuple(1 if i in cuts else 0 for i in range(L - 1))
+        init = _min_feasible_stage_mem(prof, platform, x, d, mu)
+        if init is None:
+            continue
+        J = tables.J
+        for sm in (init, [J - 1] * len(init)):
+            cfg = Config(x=x, d=d, z=_expand_z(sm, x, L))
+            ev = evaluate(prof, platform, cfg, M, pipelined_sync=pipelined_sync)
+            if ev.mem_ok and ev.objective(a1, a2) < best_obj:
+                best_obj, best_x = ev.objective(a1, a2), x
+    if best_x is None:
+        return np.inf
+    init = _min_feasible_stage_mem(prof, platform, best_x, d, mu)
+    cfg, ev = _coordinate_descent(prof, platform, best_x, d, mu, a1, a2,
+                                  pipelined_sync, init)
+    if cfg is not None:
+        best_obj = min(best_obj, ev.objective(a1, a2))
+    return best_obj
+
+
+def dp_solve(
+    profile: ModelProfile,
+    platform: Platform,
+    *,
+    alpha: Tuple[float, float],
+    total_micro_batches: int,
+    d_options: Sequence[int] = DEFAULT_D_OPTIONS,
+    merge_to: Optional[int] = None,
+    max_stages: Optional[int] = None,
+    pipelined_sync: bool = True,
+) -> Optional[PlanResult]:
+    """Exact cut-point planner (``engine='dp'``): provably optimal (x, z) per
+    (d, M) in polynomial table work — ``merge_to=None`` (the default) plans
+    at full layer depth, the regime the enumeration engines cannot reach.
+    Every returned plan is re-scored through the scalar ``evaluate`` oracle,
+    so the reported objective is directly comparable across engines."""
+    t0 = time.time()
+    a1, a2 = alpha
+    prof = _merged(profile, merge_to)
+    M = total_micro_batches
+    tables = perf_tables(prof, platform)
+    segs = segment_tables(prof, platform)
+    best, best_key = None, None
+    for d_rank, d in enumerate(d_options):
+        if M % d or M < d:
+            continue
+        mu = max(1, M // d)
+        seed = _dp_seed_incumbent(prof, platform, tables, d, mu, M, a1, a2,
+                                  pipelined_sync)
+        finalists, _ = _dp_candidates(tables, segs, d, mu, a1, a2,
+                                      pipelined_sync, max_stages,
+                                      incumbent=seed)
+        for x, z in finalists:
+            cfg = Config(x=x, d=d, z=z)
+            ev = evaluate(prof, platform, cfg, M, pipelined_sync=pipelined_sync)
+            if not ev.mem_ok:
+                continue
+            key = (ev.objective(a1, a2), d_rank)
+            if best_key is None or key < best_key:
+                best_key = key
+                best = PlanResult(cfg, ev, key[0], 0.0, prof)
+    if best is not None:
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+    return best
+
+
 def solve(
     profile: ModelProfile,
     platform: Platform,
@@ -498,7 +878,7 @@ def solve(
     alpha: Tuple[float, float],
     total_micro_batches: int,
     d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = DEFAULT_MERGE_TO,
+    merge_to: Optional[int] = DEFAULT_MERGE_TO,
     max_stages: Optional[int] = None,
     method: str = "cd",
     pipelined_sync: bool = True,
@@ -509,7 +889,17 @@ def solve(
     ``engine='batch'`` (default) and ``engine='scalar'`` return identical
     plans; the batch engine evaluates candidate sets through
     ``perfmodel.evaluate_batch`` and is the one fast enough for
-    ``merge_to`` >= 14."""
+    ``merge_to`` >= 14.  ``engine='dp'`` runs the exact cut-point DP
+    (:func:`dp_solve`): provably optimal per (d, M), polynomial instead of
+    2^(L-1), and the only engine that reaches ``merge_to=None`` (full layer
+    depth); ``method`` is ignored there — the DP is already exact.
+    ``merge_to=None`` disables layer merging for any engine (the enumeration
+    engines then pay the full 2^(L-1) space — only sensible for tiny L)."""
+    if engine == "dp":
+        return dp_solve(profile, platform, alpha=alpha,
+                        total_micro_batches=total_micro_batches,
+                        d_options=d_options, merge_to=merge_to,
+                        max_stages=max_stages, pipelined_sync=pipelined_sync)
     kw = dict(alpha=alpha, total_micro_batches=total_micro_batches,
               d_options=d_options, merge_to=merge_to, max_stages=max_stages,
               method=method, pipelined_sync=pipelined_sync)
@@ -528,18 +918,50 @@ def tpdmp_solve(
     alpha: Tuple[float, float],
     total_micro_batches: int,
     d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = DEFAULT_MERGE_TO,
+    merge_to: Optional[int] = DEFAULT_MERGE_TO,
     pipelined_sync: bool = True,
     engine: str = "batch",
 ) -> Optional[PlanResult]:
     """Throughput-only partitioning (TPDMP-style) under a grid of fixed
-    resource allocations; the objective selects among grid points (§5.1)."""
+    resource allocations; the objective selects among grid points (§5.1).
+
+    ``engine='dp'`` swaps the per-(d, memory-level) partition enumeration for
+    the exact cut-point DP restricted to that uniform level and a pure
+    time objective — the same fixed-resource optimum, reachable at full
+    layer depth."""
     t0 = time.time()
     a1, a2 = alpha
-    prof = merge_layers(profile, merge_to)
+    prof = _merged(profile, merge_to)
     L = prof.L
     J = len(platform.memory_options)
     best: Optional[PlanResult] = None
+    if engine == "dp":
+        M = total_micro_batches
+        tables = perf_tables(prof, platform)
+        segs = segment_tables(prof, platform)
+        for d in d_options:
+            if M % d or M < d:
+                continue
+            mu = max(1, M // d)
+            for j in range(J):
+                finalists, _ = _dp_candidates(
+                    tables, segs, d, mu, 0.0, 1.0, pipelined_sync,
+                    None, j_only=j)
+                grid_t, grid_cfg, grid_ev = np.inf, None, None
+                for x, z in finalists:
+                    cfg = Config(x=x, d=d, z=z)
+                    ev = evaluate(prof, platform, cfg, M,
+                                  pipelined_sync=pipelined_sync)
+                    if ev.mem_ok and ev.t_iter < grid_t:   # throughput only
+                        grid_t, grid_cfg, grid_ev = ev.t_iter, cfg, ev
+                if grid_cfg is None:
+                    continue
+                obj = grid_ev.objective(a1, a2)
+                if best is None or obj < best.objective:
+                    best = PlanResult(grid_cfg, grid_ev, obj, 0.0, prof)
+        if best is not None:
+            best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+        return best
     if engine == "batch":
         M = total_micro_batches
         tables = perf_tables(prof, platform)
@@ -594,7 +1016,7 @@ def bayes_solve(
     alpha: Tuple[float, float],
     total_micro_batches: int,
     d_options: Sequence[int] = DEFAULT_D_OPTIONS,
-    merge_to: int = DEFAULT_MERGE_TO,
+    merge_to: Optional[int] = DEFAULT_MERGE_TO,
     rounds: int = 100,
     seed: int = 0,
     pipelined_sync: bool = True,
@@ -610,7 +1032,7 @@ def bayes_solve(
     sequential seed behavior."""
     t0 = time.time()
     a1, a2 = alpha
-    prof = merge_layers(profile, merge_to)
+    prof = _merged(profile, merge_to)
     L = prof.L
     J = len(platform.memory_options)
     tables = perf_tables(prof, platform)

@@ -86,6 +86,61 @@ def test_round_trip_property(data):
     assert again.content_hash == plan.content_hash
 
 
+# ----------------------------------------------------- dp-engine plan artifact
+@pytest.fixture(scope="module")
+def dp_session():
+    return session("bert-large", platform="aws", global_batch=64).plan(
+        alpha=ALPHA, engine="dp", **FAST)
+
+
+def test_dp_plan_round_trip_and_replay(dp_session):
+    """A DeploymentPlan produced by engine='dp' survives JSON exactly and
+    replays through the simulator and the storage-backed engine."""
+    plan = dp_session.deployment_plan
+    assert plan.engine == "dp"
+    again = DeploymentPlan.from_json(plan.to_json())
+    assert again == plan
+    assert again.content_hash == plan.content_hash
+    sim = plan.simulate()
+    eng = plan.emulate(steps=1)
+    assert sim.t_iter > 0 and eng.t_iter > 0
+    # solver-predicted numbers replay: simulate tracks the closed form
+    assert sim.t_iter == pytest.approx(plan.t_iter, rel=0.1)
+
+
+def test_content_hash_stable_across_engines(dp_session, bert_session):
+    """Identical decisions hash identically whatever engine found them:
+    solver/engine/solve_seconds are provenance, excluded from the hash."""
+    plan = dp_session.deployment_plan
+    for prov in (dict(engine="batch"), dict(solver="exhaustive"),
+                 dict(solve_seconds=1234.5)):
+        assert dataclasses.replace(plan, **prov).content_hash \
+            == plan.content_hash
+    assert dataclasses.replace(plan, z=tuple(plan.z[::-1])).content_hash \
+        != plan.content_hash
+    # at this depth the CD heuristic finds the DP optimum, so the two
+    # engines' plans are the same deployment — and hash the same
+    batch_plan = bert_session.deployment_plan
+    assert (batch_plan.x, batch_plan.z, batch_plan.d) \
+        == (plan.x, plan.z, plan.d)
+    assert batch_plan.content_hash == plan.content_hash
+
+
+def test_dp_full_depth_plan_records_unmerged(tmp_path):
+    """merge_to=None round-trips and resolves against the unmerged profile."""
+    s = session("bert-large", platform="aws", global_batch=32).plan(
+        alpha=ALPHA, engine="dp", merge_to=None, d_options=(1, 2))
+    plan = s.deployment_plan
+    assert plan.merge_to is None
+    assert len(plan.z) == resolve_profile("bert-large", AWS_LAMBDA).L
+    path = tmp_path / "plan_dp.json"
+    plan.save(path)
+    loaded = DeploymentPlan.load(path)
+    assert loaded == plan
+    loaded.resolve()                      # fingerprint-checked rebuild
+    assert loaded.simulate().t_iter > 0
+
+
 # ------------------------------------------------------------- fingerprint
 def test_resolve_profile_reduced_arch_spelling():
     """The numeric emulation mode records `<arch>@reduced<L>`; it must
@@ -221,6 +276,8 @@ def test_session_rejects_unknown(tmp_path):
         session("no-such-model").profile()
     with pytest.raises(ValueError):
         session("bert-large").plan(solver="gurobi", **FAST)
+    with pytest.raises(ValueError, match="bayes"):
+        session("bert-large").plan(solver="bayes", engine="dp", **FAST)
 
 
 # --------------------------------------------------------------- CLI smoke
@@ -248,6 +305,25 @@ def test_cli_plan_simulate_emulate_replay(tmp_path, capsys):
     assert f"cost=${sim.cost:.6f}/iter" in sim_out
     assert f"t_iter={eng.t_iter:.3f}s" in eng_out
     assert plan.content_hash in sim_out
+
+
+def test_cli_plan_engine_dp(tmp_path, capsys):
+    """`repro plan --engine dp` plans at full depth by default, records the
+    engine in the artifact, and the saved plan replays."""
+    path = tmp_path / "plan_dp.json"
+    out = _run_cli(capsys, "plan", "--model", "amoebanet-d18", "--batch", "32",
+                   "--engine", "dp", "-o", str(path))
+    assert "dp" in out
+    plan = DeploymentPlan.load(path)
+    assert plan.engine == "dp" and plan.merge_to is None
+    _run_cli(capsys, "simulate", str(path))
+
+
+def test_cli_sweep_engine_dp(capsys):
+    out = _run_cli(capsys, "sweep", "--model", "amoebanet-d18", "--batch",
+                   "16", "--engine", "dp", "--merge-to", "8")
+    assert "engine=dp" in out
+    assert "RECOMMENDED" in out
 
 
 def test_cli_sweep(capsys, tmp_path):

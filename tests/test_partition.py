@@ -6,7 +6,10 @@ from repro.core.partition import (
     hat,
     highest_layers,
     lowest_layers,
+    merge_boundaries,
     merge_layers,
+    segment_sum_table,
+    segment_sum_table_rev,
     stages_of,
     tilde,
 )
@@ -54,3 +57,41 @@ def test_merge_balances_compute():
     merged = merge_layers(prof, 8, criterion="compute")
     w = [np.mean(l.fwd_time) + np.mean(l.bwd_time) for l in merged.layers]
     assert max(w) / (sum(w) / len(w)) < 3.0  # no monster super-layer
+
+
+def test_merge_boundaries_nest_across_depths():
+    """Hierarchical merging: depth k's boundary set contains depth k-1's for
+    every k, so the planner's cut-point space grows monotonically with merge
+    depth (the property behind monotone plan quality)."""
+    for model in ("bert-large", "amoebanet-d36"):
+        prof = paper_model_profile(model, AWS_LAMBDA)
+        prev = None
+        for target in range(2, prof.L + 1):
+            edges = set(merge_boundaries(prof, target))
+            assert len(edges) == target + 1
+            if prev is not None:
+                assert prev <= edges    # refinement: superset of shallower
+            prev = edges
+        # full depth merges nothing
+        assert merge_layers(prof, prof.L) is prof
+
+
+@given(
+    u=st.lists(st.floats(0.0, 100.0), min_size=1, max_size=10),
+    data=st.data(),
+)
+@settings(max_examples=100, deadline=None)
+def test_segment_tables_match_hat_tilde_bitwise(u, data):
+    """The DP's per-segment sums must agree bit-for-bit with the hat/tilde
+    stage reductions the scalar oracle uses (a one-ulp disagreement could
+    flip eq (3b) feasibility between engines)."""
+    L = len(u)
+    x = data.draw(st.lists(st.integers(0, 1), min_size=L - 1, max_size=L - 1))
+    u = np.array(u)
+    seg_h = segment_sum_table(u)
+    seg_t = segment_sum_table_rev(u)
+    h = hat(u, np.array(x))
+    t = tilde(u, np.array(x))
+    for lo, hi in stages_of(x):
+        assert seg_h[lo, hi] == h[hi]       # exact, not approx
+        assert seg_t[lo, hi] == t[lo]

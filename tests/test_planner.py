@@ -104,19 +104,130 @@ def test_tpdmp_engine_parity():
 
 
 def test_deep_merge_solves_fast_and_matches_quality():
-    """The point of the batched engine: merge_to=16 (2^15 partitions per d,
-    hopeless for the scalar solver) completes in well under a minute, and its
-    plan quality tracks the shallow space.  The greedy merge boundaries of
-    different depths don't nest, so the objectives differ by small alignment
-    deltas in either direction — assert they stay within 2%."""
+    """Deep search is the dp engine's regime: merge_to=16 and full depth
+    (L=26, 2^25 partitions per d — hopeless for the enumeration engines)
+    complete in well under a minute, and — because the hierarchical merge
+    boundaries nest and the DP is exact — quality is *monotone* in depth,
+    not merely within an alignment tolerance."""
     prof = paper_model_profile("bert-large", AWS_LAMBDA)
     kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=16)
     shallow = planner.solve(prof, AWS_LAMBDA, merge_to=8, **kw)
-    deep = planner.solve(prof, AWS_LAMBDA, merge_to=16, **kw)
-    assert shallow is not None and deep is not None
-    assert deep.evaluation.mem_ok
+    deep = planner.solve(prof, AWS_LAMBDA, merge_to=16, engine="dp", **kw)
+    full = planner.solve(prof, AWS_LAMBDA, merge_to=None, engine="dp", **kw)
+    assert shallow is not None and deep is not None and full is not None
+    assert deep.evaluation.mem_ok and full.evaluation.mem_ok
+    assert full.profile.L == prof.L          # genuinely unmerged
     assert deep.solve_seconds < 60.0
-    assert deep.objective <= shallow.objective * 1.02
+    assert full.solve_seconds < 60.0
+    assert deep.objective <= shallow.objective * (1 + 1e-9)
+    assert full.objective <= deep.objective * (1 + 1e-9)
+
+
+# ------------------------------------------------- exact DP cut-point engine
+@given(seed=st.integers(0, 120))
+@settings(max_examples=14, deadline=None)
+def test_dp_matches_exhaustive_random(seed):
+    """The DP engine is exact: it returns the exhaustive-enumeration optimum
+    (same oracle-scored objective) on random small instances."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(3, 7))
+    prof = random_profile(rng, L=L, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=L)
+    ex = planner.solve(prof, SMALL, method="exhaustive", engine="batch", **kw)
+    dp = planner.solve(prof, SMALL, engine="dp", **kw)
+    assert (ex is None) == (dp is None)
+    if ex is not None:
+        assert dp.objective == ex.objective
+        assert dp.evaluation.mem_ok
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_dp_matches_exhaustive_seeded(seed):
+    """Deterministic subset of the exactness property (no hypothesis)."""
+    rng = np.random.default_rng(seed + 300)
+    prof = random_profile(rng, L=6, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=6)
+    ex = planner.solve(prof, SMALL, method="exhaustive", engine="batch", **kw)
+    dp = planner.solve(prof, SMALL, engine="dp", **kw)
+    assert (ex is None) == (dp is None)
+    if ex is not None:
+        assert dp.objective == ex.objective
+
+
+def test_dp_matches_exhaustive_L12():
+    """Full-width check at L=12 (2^11 partitions x memory combos), the
+    largest instance the exhaustive cross-check still enumerates quickly."""
+    import dataclasses as dc
+
+    tiny = dc.replace(AWS_LAMBDA,
+                      memory_options=AWS_LAMBDA.memory_options[3:5])  # J=2
+    rng = np.random.default_rng(777)
+    prof = random_profile(rng, L=12, J=2)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2, 4), merge_to=12)
+    ex = planner.solve(prof, tiny, method="exhaustive", engine="batch", **kw)
+    dp = planner.solve(prof, tiny, engine="dp", **kw)
+    assert ex is not None and dp is not None
+    assert dp.objective == ex.objective
+
+
+def test_dp_respects_max_stages():
+    rng = np.random.default_rng(5)
+    prof = random_profile(rng, L=6, J=3)
+    kw = dict(alpha=(1.0, 1e-4), total_micro_batches=8,
+              d_options=(1, 2), merge_to=6, max_stages=2)
+    ex = planner.solve(prof, SMALL, method="exhaustive", engine="batch", **kw)
+    dp = planner.solve(prof, SMALL, engine="dp", **kw)
+    assert (ex is None) == (dp is None)
+    if dp is not None:
+        assert sum(dp.config.x) + 1 <= 2
+        assert dp.objective == ex.objective
+
+
+@pytest.mark.parametrize("alpha", [(1.0, 0.0), (1.0, 2**19 * 1e-9)])
+@pytest.mark.parametrize("model", ["amoebanet-d18", "bert-large"])
+def test_dp_never_worse_than_batch(model, alpha):
+    """On the paper models the exact DP's objective must be <= the batch
+    CD heuristic's at the same depth (equal up to float association when CD
+    happens to find the optimum)."""
+    prof = paper_model_profile(model, AWS_LAMBDA)
+    kw = dict(alpha=alpha, total_micro_batches=16, merge_to=8)
+    batch = planner.solve(prof, AWS_LAMBDA, engine="batch", **kw)
+    dp = planner.solve(prof, AWS_LAMBDA, engine="dp", **kw)
+    assert (batch is None) == (dp is None)
+    if batch is not None:
+        assert dp.objective <= batch.objective * (1 + 1e-9)
+
+
+def test_dp_quality_monotone_in_merge_depth():
+    """Hierarchical merge boundaries nest, so with an exact solver the
+    objective can only improve as the merge depth grows toward full L
+    (closes the ROADMAP merge-boundary item)."""
+    prof = paper_model_profile("bert-large", AWS_LAMBDA)
+    kw = dict(alpha=(1.0, 2**16 * 1e-9), total_micro_batches=16)
+    objs = []
+    for mt in (6, 10, 14, None):
+        r = planner.solve(prof, AWS_LAMBDA, engine="dp", merge_to=mt, **kw)
+        assert r is not None and r.evaluation.mem_ok
+        objs.append(r.objective)
+    for shallow, deep in zip(objs, objs[1:]):
+        assert deep <= shallow * (1 + 1e-9)
+
+
+def test_tpdmp_dp_engine_not_worse():
+    """tpdmp's dp engine solves the same fixed-resource grid exactly, so it
+    can never report a worse grid point than the enumerating batch engine."""
+    prof = paper_model_profile("bert-large", AWS_LAMBDA)
+    kw = dict(alpha=(1.0, 2**19 * 1e-9), total_micro_batches=16, merge_to=8)
+    batch = planner.tpdmp_solve(prof, AWS_LAMBDA, engine="batch", **kw)
+    dp = planner.tpdmp_solve(prof, AWS_LAMBDA, engine="dp", **kw)
+    assert (batch is None) == (dp is None)
+    if batch is not None:
+        assert dp.objective <= batch.objective * (1 + 1e-9)
+        assert dp.evaluation.t_iter == pytest.approx(
+            batch.evaluation.t_iter, rel=1e-9)
 
 
 @pytest.mark.parametrize("model", ["resnet101", "amoebanet-d18", "bert-large"])
