@@ -10,13 +10,21 @@ Also measures the *host* wall-clock of numeric execution (real JAX fwd/bwd
 through the store) across three backward modes — the seed's eager
 per-micro-batch ``jax.vjp`` retracing, the jitted recompute-in-backward
 variant, and the default jitted path that caches VJP residuals between
-forward and backward — the ``walltime`` rows.
+forward and backward — the ``walltime`` rows; plus a ``backend_parity`` row
+checking that the same numeric plan trains to bit-identical params on the
+``local`` (real thread concurrency, wall-clock) execution backend.
+
+Writes the accuracy rows to ``BENCH_runtime_accuracy.json`` at the repo root
+(``--fast`` writes ``BENCH_runtime_accuracy_fast.json``) so CI can track the
+engine-vs-simulator error as an artifact.
 
     PYTHONPATH=src python -m benchmarks.runtime_accuracy [--fast]
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 import time
 
 import numpy as np
@@ -31,6 +39,10 @@ from repro.serverless.simulator import simulate_funcpipe
 
 MODELS = ["bert-large", "gemma3-4b", "phi3-mini-3.8b"]
 PLATFORMS = [AWS_LAMBDA, ALIBABA_FC]
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_REPO_ROOT, "BENCH_runtime_accuracy.json")
+OUT_JSON_FAST = os.path.join(_REPO_ROOT, "BENCH_runtime_accuracy_fast.json")
 
 
 def _walltime_rows(fast: bool):
@@ -81,6 +93,55 @@ def _walltime_rows(fast: bool):
                     "platform": "host", "mode": label,
                     "sec_per_step": round(
                         times[num] / max(times[den], 1e-9), 2)})
+    return out
+
+
+def _backend_parity_rows(fast: bool):
+    """Numeric K-step run on the emulated (virtual clock) and local (real
+    concurrent threads, wall-clock) execution backends: params must be
+    bit-identical — the acceptance bar for any future real-platform
+    backend — with both hosts' seconds reported for reference."""
+    import jax
+
+    import repro.configs as configs
+    from repro.configs.base import InputShape
+    from repro.core.perfmodel import Config
+    from repro.data.synthetic import make_batch
+    from repro.models import registry
+    from repro.optim import AdamW
+
+    cfg = dataclasses.replace(configs.get_config("phi3-mini-3.8b").reduced(),
+                              n_layers=4)
+    B, S, d, mu = 8, 16, 2, 2
+    steps = 1 if fast else 2
+    shape = InputShape("bparity", S, B, "train")
+    prof = arch_model_profile(cfg, AWS_LAMBDA, seq=S, micro_batch=B // (d * mu))
+    L = prof.L
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    config = Config(x=x, d=d, z=tuple(0 for _ in range(L)))
+    params0 = registry.init_params(cfg, jax.random.PRNGKey(0))
+    batches = [make_batch(cfg, shape, step=k) for k in range(steps)]
+    out = []
+    results = {}
+    for backend in ("emulated", "local"):
+        exe = Execution(cfg=cfg, optimizer=AdamW(lr=1e-2),
+                        init_params=params0, batch_fn=lambda k: batches[k])
+        t0 = time.time()
+        results[backend] = run_plan(prof, AWS_LAMBDA, config,
+                                    total_micro_batches=d * mu, steps=steps,
+                                    execution=exe, backend=backend)
+        out.append({"bench": "runtime_accuracy", "model": "backend_parity",
+                    "platform": "host", "backend": backend, "steps": steps,
+                    "sec_per_step": round((time.time() - t0) / steps, 3)})
+    leaves_e = jax.tree.leaves(results["emulated"].params)
+    leaves_l = jax.tree.leaves(results["local"].params)
+    bit = all(np.array_equal(np.asarray(a), np.asarray(b))
+              for a, b in zip(leaves_e, leaves_l))
+    out.append({"bench": "runtime_accuracy", "model": "backend_parity",
+                "platform": "host", "backend": "emulated-vs-local",
+                "bit_identical_params": bool(bit),
+                "loss_identical": results["emulated"].losses
+                == results["local"].losses})
     return out
 
 
@@ -135,7 +196,24 @@ def rows(fast: bool = False):
                 "model_rel_err": round(max(
                     r.get("model_rel_err", 0.0) for r in out), 4)})
     out.extend(_walltime_rows(fast))
+    out.extend(_backend_parity_rows(fast))
+    _write_json(out, fast)
     return out
+
+
+def _write_json(out, fast: bool) -> None:
+    mx = next(r for r in out if r["model"] == "MAX")
+    parity = next(r for r in out if "bit_identical_params" in r)
+    summary = {
+        "fast": fast,
+        "max_sim_rel_err": mx["sim_rel_err"],
+        "max_model_rel_err": mx["model_rel_err"],
+        "backend_parity_bit_identical": parity["bit_identical_params"],
+        "rows": out,
+    }
+    with open(OUT_JSON_FAST if fast else OUT_JSON, "w") as f:
+        json.dump(summary, f, indent=2)
+        f.write("\n")
 
 
 def main(fast: bool = False):
@@ -150,6 +228,9 @@ def main(fast: bool = False):
     print(f"numeric engine wall-clock: {jt['sec_per_step']}x faster than "
           f"eager vjp; residual caching {rd['sec_per_step']}x faster than "
           f"recompute-in-bwd")
+    parity = next(r for r in rs if "bit_identical_params" in r)
+    print(f"backend parity (emulated vs local): bit_identical_params="
+          f"{parity['bit_identical_params']}")
 
 
 if __name__ == "__main__":

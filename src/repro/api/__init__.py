@@ -17,6 +17,7 @@ from repro.api.plan import (
     ResolvedPlan,
     profile_fingerprint,
 )
+from repro.api.plan_cache import PlanCache, resolve_plan_cache
 from repro.api.session import (
     DEFAULT_ALPHA,
     InfeasiblePlanError,
@@ -27,9 +28,11 @@ from repro.api.session import (
 __all__ = [
     "DeploymentPlan",
     "InfeasiblePlanError",
+    "PlanCache",
     "PlanCompatibilityError",
     "ResolvedPlan",
     "profile_fingerprint",
+    "resolve_plan_cache",
     "Session",
     "session",
     "DEFAULT_ALPHA",

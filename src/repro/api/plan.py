@@ -281,15 +281,20 @@ class DeploymentPlan:
                                  contention=contention)
 
     def emulate(self, *, steps: int = 1, contention: bool = False,
-                execution=None, **resolve_kw):
-        """Replay through the storage-backed execution engine."""
+                execution=None, backend="emulated", **resolve_kw):
+        """Execute through the storage-backed engine on an execution
+        backend: ``"emulated"`` (virtual-clock cost model), ``"local"``
+        (real concurrent workers, wall-clock), or any registered
+        :class:`repro.serverless.backends.ExecutionBackend`.  The same saved
+        plan JSON drives every backend unmodified."""
         from repro.serverless.runtime import run_plan
 
         rp = self.resolve(**resolve_kw)
         return run_plan(rp.profile, rp.platform, rp.config,
                         rp.total_micro_batches, steps=steps,
                         pipelined_sync=rp.pipelined_sync,
-                        contention=contention, execution=execution)
+                        contention=contention, execution=execution,
+                        backend=backend)
 
     # ------------------------------------------------------------ describing
     def describe(self) -> str:

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 from typing import List, Optional, Sequence, Tuple, Union
 
-from repro.api.plan import DeploymentPlan
+from repro.api.plan import DeploymentPlan, profile_fingerprint
+from repro.api.plan_cache import PlanCache, resolve_plan_cache
 from repro.core import planner
 from repro.core.partition import ModelProfile, merge_layers
 from repro.core.profiler import resolve_profile
@@ -40,7 +41,8 @@ class Session:
     def __init__(self, model: str, platform: Union[str, Platform] = "aws", *,
                  global_batch: int = 64, micro_batch: Optional[int] = None,
                  seq: Optional[int] = None, pipelined_sync: bool = True,
-                 contention: bool = False):
+                 contention: bool = False,
+                 plan_cache: Union[None, bool, str, PlanCache] = None):
         self.model = model
         self.platform = (get_platform(platform)
                          if isinstance(platform, str) else platform)
@@ -54,6 +56,9 @@ class Session:
         self.seq = seq
         self.pipelined_sync = pipelined_sync
         self.contention = contention
+        # None/False = solve every time; True = default cache dir; a path or
+        # PlanCache = that cache (see repro.api.plan_cache)
+        self.plan_cache: Optional[PlanCache] = resolve_plan_cache(plan_cache)
 
         self.model_profile: Optional[ModelProfile] = None
         self.deployment_plan: Optional[DeploymentPlan] = None
@@ -91,17 +96,54 @@ class Session:
              seed: int = 0) -> "Session":
         """Co-optimize partition + resources; freeze a DeploymentPlan.
 
-        ``solver``: ``cd`` / ``exhaustive`` (the MIQP-style co-optimizer),
-        ``tpdmp`` or ``bayes`` (the §5.6 comparison algorithms).
+        ``solver``: ``cd`` / ``cd-steepest`` / ``exhaustive`` (the
+        MIQP-style co-optimizer), ``tpdmp`` or ``bayes`` (the §5.6
+        comparison algorithms).
         ``engine``: ``batch`` / ``scalar`` (enumeration, identical plans) or
         ``dp`` (the exact cut-point DP — pair it with ``merge_to=None`` to
         plan at full layer depth).
+
+        With a ``plan_cache`` attached to the session, the solve is keyed on
+        (merged-profile fingerprint, platform, objective, M, solver knobs)
+        and a verified cache hit skips the solver entirely.
         """
         prof = self._require_profile()
         M = self.total_micro_batches
+
+        cache_key = None
+        if self.plan_cache is not None:
+            merged = (merge_layers(prof, merge_to)
+                      if merge_to is not None else prof)
+            cache_key = PlanCache.solve_key(
+                profile_fingerprint=profile_fingerprint(merged, self.platform),
+                platform=self.platform.name, alpha=alpha,
+                total_micro_batches=M, solver=solver, engine=engine,
+                merge_to=merge_to, d_options=d_options, max_stages=max_stages,
+                pipelined_sync=self.pipelined_sync,
+                rounds=rounds if solver == "bayes" else None,
+                seed=seed if solver == "bayes" else None)
+            rp = None
+
+            def _verify(plan, merged=merged):
+                nonlocal rp
+                rp = plan.resolve(profile=merged, platform=self.platform)
+
+            cached = self.plan_cache.get(cache_key, verify=_verify)
+            if cached is not None:
+                from repro.core.perfmodel import evaluate
+
+                ev = evaluate(rp.profile, rp.platform, rp.config,
+                              rp.total_micro_batches,
+                              pipelined_sync=rp.pipelined_sync)
+                self.plan_result = planner.PlanResult(
+                    rp.config, ev, ev.objective(*alpha),
+                    cached.solve_seconds, rp.profile)
+                self.deployment_plan = cached
+                return self
+
         common = dict(alpha=alpha, total_micro_batches=M, merge_to=merge_to,
                       d_options=d_options, pipelined_sync=self.pipelined_sync)
-        if solver in ("cd", "exhaustive"):
+        if solver in ("cd", "cd-steepest", "exhaustive"):
             r = planner.solve(prof, self.platform, method=solver,
                               engine=engine, max_stages=max_stages, **common)
         elif solver == "tpdmp":
@@ -126,6 +168,8 @@ class Session:
             total_micro_batches=M, pipelined_sync=self.pipelined_sync,
             solver=solver, engine=engine, merge_to=merge_to, seq=self.seq,
             micro_batch=self._profile_mb)
+        if cache_key is not None:
+            self.plan_cache.put(cache_key, self.deployment_plan)
         return self
 
     def sweep(self, *, alphas: Optional[Sequence[Tuple[float, float]]] = None,
@@ -173,10 +217,14 @@ class Session:
             platform=self.platform)
         return self
 
-    def emulate(self, *, steps: int = 1, execution=None) -> "Session":
-        """Execute the plan through the storage-backed runtime engine."""
+    def emulate(self, *, steps: int = 1, execution=None,
+                backend="emulated") -> "Session":
+        """Execute the plan through the storage-backed runtime engine on the
+        chosen execution backend (``"emulated"``, ``"local"``, or an
+        :class:`~repro.serverless.backends.ExecutionBackend` instance)."""
         self.engine_result = self._require_plan().emulate(
             steps=steps, contention=self.contention, execution=execution,
+            backend=backend,
             profile=self._merged_profile(), platform=self.platform)
         return self
 

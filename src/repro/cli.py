@@ -58,6 +58,14 @@ def _add_model_args(p: argparse.ArgumentParser, *, model_default=None):
                    help="model §5.4 bandwidth contention")
 
 
+def _add_cache_args(p: argparse.ArgumentParser):
+    p.add_argument("--plan-cache", default=None, metavar="DIR",
+                   help="plan-cache directory (default: $REPRO_PLAN_CACHE "
+                        "or ~/.cache/repro/plans)")
+    p.add_argument("--no-plan-cache", action="store_true",
+                   help="always solve; never read or write the plan cache")
+
+
 def _add_solver_args(p: argparse.ArgumentParser):
     p.add_argument("--merge-to", type=int, default=None,
                    help="layer-merge depth (default: planner default)")
@@ -65,7 +73,8 @@ def _add_solver_args(p: argparse.ArgumentParser):
                    help="time weight a2 in the objective a1*c + a2*t "
                         "(a1=1; default 2^16 * 1e-9)")
     p.add_argument("--solver", default="cd",
-                   choices=("cd", "exhaustive", "tpdmp", "bayes"))
+                   choices=("cd", "cd-steepest", "exhaustive", "tpdmp",
+                            "bayes"))
     p.add_argument("--engine", default="batch",
                    choices=("batch", "scalar", "dp"),
                    help="search engine: batch/scalar enumerate the merged "
@@ -77,6 +86,16 @@ def _add_solver_args(p: argparse.ArgumentParser):
                    help="CI-sized search (merge_to=6, d in {1,2,4})")
 
 
+def _cache_spec(args):
+    """CLI plan-cache policy: on by default (repeated plans/sweeps become
+    near-instant), --no-plan-cache to always solve, --plan-cache DIR to
+    point somewhere else."""
+    if getattr(args, "no_plan_cache", False):
+        return None
+    explicit = getattr(args, "plan_cache", None)
+    return True if explicit is None else explicit
+
+
 def _make_session(args, **kw):
     from repro.api import session
 
@@ -84,7 +103,8 @@ def _make_session(args, **kw):
                    global_batch=64 if args.batch is None else args.batch,
                    micro_batch=args.micro_batch,
                    seq=args.seq, pipelined_sync=not args.lambda_ml_sync,
-                   contention=getattr(args, "contention", False), **kw)
+                   contention=getattr(args, "contention", False),
+                   plan_cache=_cache_spec(args), **kw)
 
 
 def _plan_kw(args) -> dict:
@@ -99,7 +119,8 @@ def _plan_kw(args) -> dict:
             f"--engine {args.engine}")
     kw = dict(alpha=(1.0, alpha2), solver=args.solver,
               engine=args.engine)
-    if args.solver in ("cd", "exhaustive") and args.max_stages is not None:
+    if args.solver in ("cd", "cd-steepest", "exhaustive") \
+            and args.max_stages is not None:
         kw["max_stages"] = args.max_stages
     if args.merge_to is not None:
         kw["merge_to"] = args.merge_to
@@ -133,6 +154,7 @@ def _load_or_plan(args):
             ("--engine", args.engine != "batch"),
             ("--max-stages", args.max_stages is not None),
             ("--fast", args.fast),
+            ("--plan-cache", getattr(args, "plan_cache", None) is not None),
         ] if passed]
         if conflicting:
             raise SystemExit(
@@ -158,7 +180,8 @@ def _cmd_plan(args) -> int:
         s = _make_session(args).profile()
     plan = s.plan(**_plan_kw(args)).deployment_plan
     print(plan.describe())
-    print(f"solve: {plan.solve_seconds:.2f}s "
+    cached = " [plan cache hit]" if s.plan_cache and s.plan_cache.hits else ""
+    print(f"solve: {plan.solve_seconds:.2f}s{cached} "
           f"(alpha={plan.alpha[0]:g},{plan.alpha[1]:.3e}; "
           f"objective={plan.objective:.6f})")
     if args.out:
@@ -305,23 +328,36 @@ def _cmd_emulate(args) -> int:
         plan.save(args.out)
         print(f"wrote {args.out} (content hash {plan.content_hash})")
 
+    from repro.serverless.backends import get_backend
+
+    with _operator_errors():        # unknown backend name lists the registry
+        backend = get_backend(args.backend)
     res = run_plan(rp.profile, rp.platform, rp.config,
                    rp.total_micro_batches, steps=args.steps,
                    pipelined_sync=rp.pipelined_sync,
-                   contention=args.contention, execution=ex)
+                   contention=args.contention, execution=ex,
+                   backend=backend)
     for k, m in enumerate(res.metrics):
         print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
               f"aux={m['aux']:.4f}")
     bd = res.breakdown
-    print(f"engine: t_iter={res.t_iter:.3f}s cost=${res.cost:.6f}/iter "
-          f"mem={res.total_mem_gb:.1f}GB "
+    clock = "host wall-clock" if res.wall_clock else "virtual"
+    print(f"engine[{res.backend}]: t_iter={res.t_iter:.3f}s ({clock}) "
+          f"cost=${res.cost:.6f}/iter mem={res.total_mem_gb:.1f}GB "
           f"(compute={bd['compute']:.3f}s pipe_comm={bd['pipeline_comm']:.3f}s "
           f"sync={bd['sync']:.3f}s)")
     ss = res.store_stats
-    print(f"store: {ss.puts} puts / {ss.gets} gets, "
+    print(f"store: {ss.puts} puts / {ss.gets} gets / {ss.deletes} deletes, "
           f"{ss.bytes_in / MB:.0f}MB in / {ss.bytes_out / MB:.0f}MB out, "
-          f"peak {ss.peak_bytes / MB:.0f}MB")
+          f"peak {ss.peak_bytes / MB:.0f}MB (drained, bytes conserved)")
 
+    if res.wall_clock:
+        # host seconds are not the cost model's seconds: the analytic
+        # comparison only makes sense on virtual-clock backends
+        print(f"vs simulator: n/a (backend {res.backend!r} measures host "
+              "wall-clock; numerics validated instead — see "
+              "tests/test_backends.py)")
+        return 0
     sim = simulate_funcpipe(rp.profile, rp.platform, rp.config,
                             rp.total_micro_batches,
                             pipelined_sync=rp.pipelined_sync,
@@ -393,6 +429,9 @@ def _cmd_sweep(args) -> int:
     rec = planner.recommend(results)
     print(f"\nRECOMMENDED: d={rec.config.d}, {sum(rec.config.x)+1} stages, "
           f"t={rec.evaluation.t_iter:.2f}s, ${rec.evaluation.c_iter:.5f}/iter")
+    if s.plan_cache is not None and (s.plan_cache.hits or s.plan_cache.misses):
+        print(f"plan cache: {s.plan_cache.hits} hits / "
+              f"{s.plan_cache.misses} misses ({s.plan_cache.root})")
     if args.save_dir:
         os.makedirs(args.save_dir, exist_ok=True)
         for plan in saved:
@@ -456,6 +495,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = sub.add_parser("plan", help="co-optimize and save a DeploymentPlan")
     _add_model_args(p)
     _add_solver_args(p)
+    _add_cache_args(p)
     p.add_argument("-o", "--out", default=None, help="write plan JSON here")
     p.set_defaults(func=_cmd_plan)
 
@@ -465,6 +505,7 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="saved DeploymentPlan JSON (or pass --model to plan)")
     _add_model_args(p)
     _add_solver_args(p)
+    _add_cache_args(p)
     p.set_defaults(func=_cmd_simulate)
 
     p = sub.add_parser("emulate",
@@ -473,6 +514,15 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="saved DeploymentPlan JSON (or pass --model to plan)")
     _add_model_args(p)
     _add_solver_args(p)
+    _add_cache_args(p)
+    # validated against the live backend registry at run time (not a
+    # hardcoded choices=) so register_backend'ed third-party names work here
+    p.add_argument("--backend", default="emulated", metavar="NAME",
+                   help="execution backend: emulated (virtual-clock cost "
+                        "model, default), local (real concurrent workers, "
+                        "host wall-clock), aws/oss (real-platform stubs), "
+                        "or any registered backend name; the same plan JSON "
+                        "drives any of them")
     p.add_argument("--steps", type=int, default=2)
     p.add_argument("-o", "--out", default=None,
                    help="also save the executed plan JSON here")
@@ -487,6 +537,7 @@ def main(argv: Optional[List[str]] = None) -> int:
     p = sub.add_parser("sweep", help="Pareto frontier + recommendation + "
                                      "baseline algorithms (paper §5)")
     _add_model_args(p)
+    _add_cache_args(p)
     p.add_argument("--merge-to", type=int, default=None)
     p.add_argument("--engine", default="batch",
                    choices=("batch", "scalar", "dp"),
@@ -511,11 +562,15 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     args = ap.parse_args(argv)
     from repro.api import InfeasiblePlanError, PlanCompatibilityError
+    from repro.serverless.backends import BackendUnavailableError
 
     try:
         return args.func(args) or 0
-    except (PlanCompatibilityError, InfeasiblePlanError) as e:
-        # operator-facing outcomes, not bugs: exit cleanly with the message
+    except (PlanCompatibilityError, InfeasiblePlanError,
+            BackendUnavailableError) as e:
+        # operator-facing outcomes (incl. cloud-backend stubs), not bugs:
+        # exit cleanly with the message; a genuine NotImplementedError
+        # elsewhere still crashes loudly with its traceback
         raise SystemExit(f"error: {e}") from None
 
 

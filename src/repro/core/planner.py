@@ -154,6 +154,46 @@ def _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
     return best_cfg, best, best_obj
 
 
+def _cd_from_steepest(profile, platform, x, d, mu, a1, a2, pipelined_sync,
+                      start: List[int], floor: List[int],
+                      sweeps: int = _CD_SWEEPS):
+    """Steepest-descent CD (``method='cd-steepest'``): each move evaluates
+    *all* (stage, level) neighbors of the incumbent and accepts the single
+    best strict improvement (ties: first in stage-major, level order).  The
+    move budget ``sweeps * n_stages`` matches the first-improvement rule's
+    maximum accepted-move count, so the two rules get equal search effort."""
+    J = len(platform.memory_options)
+    L = profile.L
+    stage_mem = list(start)
+    best_cfg = Config(x=tuple(x), d=d, z=_expand_z(stage_mem, x, L))
+    best = evaluate(profile, platform, best_cfg, mu * d,
+                    pipelined_sync=pipelined_sync)
+    if not best.mem_ok:
+        return None, None, None
+    best_obj = best.objective(a1, a2)
+    n_stages = len(stage_mem)
+    for _ in range(sweeps * max(1, n_stages)):
+        move = None                        # (obj, s, j, cfg, ev)
+        for s in range(n_stages):
+            for j in range(floor[s], J):   # never below min-feasible
+                if j == stage_mem[s]:
+                    continue
+                trial = list(stage_mem)
+                trial[s] = j
+                cfg = Config(x=tuple(x), d=d, z=_expand_z(trial, x, L))
+                ev = evaluate(profile, platform, cfg, mu * d,
+                              pipelined_sync=pipelined_sync)
+                obj = ev.objective(a1, a2)
+                if ev.mem_ok and obj < best_obj and \
+                        (move is None or obj < move[0]):
+                    move = (obj, s, j, cfg, ev)
+        if move is None:
+            break
+        best_obj, s_mv, j_mv, best_cfg, best = move
+        stage_mem[s_mv] = j_mv
+    return best_cfg, best, best_obj
+
+
 def _cd_starts(init_mem: Sequence[int], J: int) -> List[List[int]]:
     """Multi-start list for the per-stage memory CD, deduplicated keeping
     first occurrence: the min-feasible assignment, the max assignment, and
@@ -168,16 +208,20 @@ def _cd_starts(init_mem: Sequence[int], J: int) -> List[List[int]]:
 
 
 def _coordinate_descent(profile, platform, x, d, mu, a1, a2, pipelined_sync,
-                        init_mem: List[int], sweeps: int = _CD_SWEEPS):
+                        init_mem: List[int], sweeps: int = _CD_SWEEPS,
+                        rule: str = "first"):
     """Multi-start coordinate descent on per-stage memory: starts from the
     min-feasible assignment, the max assignment, and uniform levels — greedy
     CD alone gets caught in neighbor-coupled local optima (upload/download
-    terms couple adjacent stages)."""
+    terms couple adjacent stages).  ``rule`` picks the update rule: the
+    first-improvement stage sweep (``'first'``) or steepest descent over all
+    (stage, level) neighbors (``'steepest'``)."""
     J = len(platform.memory_options)
+    descend = _cd_from if rule == "first" else _cd_from_steepest
     best_cfg, best_ev, best_obj = None, None, np.inf
     for start in _cd_starts(init_mem, J):
-        cfg, ev, obj = _cd_from(profile, platform, x, d, mu, a1, a2, pipelined_sync,
-                                start, init_mem, sweeps)
+        cfg, ev, obj = descend(profile, platform, x, d, mu, a1, a2,
+                               pipelined_sync, start, init_mem, sweeps)
         if cfg is None:
             continue
         if obj < best_obj:
@@ -223,8 +267,9 @@ def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
                         best_cfg, best_ev, best_o = cfg, ev, ev.objective(a1, a2)
                 cfg, ev = best_cfg, best_ev
             else:
-                cfg, ev = _coordinate_descent(prof, platform, x, d, mu, a1, a2,
-                                              pipelined_sync, init)
+                cfg, ev = _coordinate_descent(
+                    prof, platform, x, d, mu, a1, a2, pipelined_sync, init,
+                    rule="steepest" if method == "cd-steepest" else "first")
             if cfg is None:
                 continue
             obj = ev.objective(a1, a2)
@@ -363,6 +408,59 @@ def _cd_lockstep(profile, platform, tables, X, sid, n_stages, floor_st, sm, tp,
     return best_obj, sm
 
 
+def _cd_lockstep_steepest(profile, platform, tables, X, sid, n_stages,
+                          floor_st, sm, tp, d, M, a1, a2, pipelined_sync,
+                          sweeps):
+    """Lockstep twin of `_cd_from_steepest`: per move, every alive
+    trajectory's full (stage, level) neighborhood is evaluated in one
+    batched call and the single best strict improvement accepted
+    (np.argmin's first-occurrence = the scalar rule's stage-major, level
+    tie-break), with the same ``sweeps * n_stages`` per-trajectory move
+    budget — so batch and scalar steepest return identical plans."""
+    T_, S_max = sm.shape
+    L = tables.L
+    J = tables.J
+    X_t, sid_t, ns_t, fl_t = X[tp], sid[tp], n_stages[tp], floor_st[tp]
+    Z0 = np.take_along_axis(sm, sid_t, axis=1)
+    be = _eval_chunked(profile, platform, tables, X_t, Z0, d, M, pipelined_sync)
+    best_obj = be.masked_objective(a1, a2)
+    alive = np.isfinite(best_obj)          # infeasible start == scalar None
+    moves = np.zeros(T_, dtype=np.int64)
+    max_moves = sweeps * np.maximum(ns_t, 1)
+    NB = S_max * J
+    jr = np.arange(J)
+    sr = np.arange(S_max)
+    step = max(1, _CHUNK_ROWS // NB)
+    while alive.any():
+        act = np.nonzero(alive)[0]
+        for lo in range(0, len(act), step):
+            ai = act[lo:lo + step]
+            A = len(ai)
+            base_z = np.take_along_axis(sm[ai], sid_t[ai], axis=1)   # [A, L]
+            # neighbor (stage, level) tensor: set stage s to level j
+            mask = sid_t[ai][:, None, :] == sr[None, :, None]        # [A, S, L]
+            Z_nb = np.where(mask[:, :, None, :], jr[None, None, :, None],
+                            base_z[:, None, None, :]).reshape(A * NB, L)
+            X_nb = np.repeat(X_t[ai], NB, axis=0)
+            be = evaluate_batch(profile, platform, X_nb, Z_nb, d, M,
+                                pipelined_sync=pipelined_sync, tables=tables)
+            obj = be.masked_objective(a1, a2).reshape(A, S_max, J)
+            obj[sr[None, :] >= ns_t[ai][:, None]] = np.inf    # padded stages
+            obj[jr[None, None, :] < fl_t[ai][:, :, None]] = np.inf  # floors
+            flat = obj.reshape(A, NB)
+            bj = np.argmin(flat, axis=1)         # first minimizer on ties
+            bv = flat[np.arange(A), bj]
+            acc = bv < best_obj[ai]              # strict improvement only
+            upd = ai[acc]
+            s_mv, j_mv = np.divmod(bj[acc], J)
+            sm[upd, s_mv] = j_mv
+            best_obj[upd] = bv[acc]
+            moves[upd] += 1
+            alive[ai[~acc]] = False
+            alive[upd[moves[upd] >= max_moves[upd]]] = False
+    return best_obj, sm
+
+
 def _reduce_per_partition(tp, best_obj, sm):
     """Per-partition minimum over start trajectories, first-start tie-break
     (`tp` must be sorted ascending; trajectories ordered by start rank)."""
@@ -485,9 +583,11 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
                 continue
             tp, rank = np.nonzero(valid[sel])
             sm = cand_sm[sel][tp, rank].copy()
-            b_obj, sm = _cd_lockstep(prof, platform, tables, X_f[sel], sid_f[sel],
-                                     ns_f[sel], fl_f[sel], sm, tp, d, M, a1, a2,
-                                     pipelined_sync, _CD_SWEEPS)
+            lockstep = (_cd_lockstep_steepest if method == "cd-steepest"
+                        else _cd_lockstep)
+            b_obj, sm = lockstep(prof, platform, tables, X_f[sel], sid_f[sel],
+                                 ns_f[sel], fl_f[sel], sm, tp, d, M, a1, a2,
+                                 pipelined_sync, _CD_SWEEPS)
             pres, min_obj, win_sm = _reduce_per_partition(tp, b_obj, sm)
             for q in range(len(pres)):
                 if not np.isfinite(min_obj[q]):
@@ -886,6 +986,12 @@ def solve(
 ) -> Optional[PlanResult]:
     """FuncPipe's co-optimizer.  Returns the best feasible plan or None.
 
+    ``method`` selects the per-partition memory search: ``'cd'``
+    (first-improvement coordinate descent, the reference rule),
+    ``'cd-steepest'`` (steepest descent over all (stage, level) neighbors —
+    same multi-start set and move budget, typically fewer moves to
+    converge) or ``'exhaustive'`` (enumerate memory combos, small J^S only).
+
     ``engine='batch'`` (default) and ``engine='scalar'`` return identical
     plans; the batch engine evaluates candidate sets through
     ``perfmodel.evaluate_batch`` and is the one fast enough for
@@ -895,6 +1001,8 @@ def solve(
     depth); ``method`` is ignored there — the DP is already exact.
     ``merge_to=None`` disables layer merging for any engine (the enumeration
     engines then pay the full 2^(L-1) space — only sensible for tiny L)."""
+    if method not in ("cd", "cd-steepest", "exhaustive"):
+        raise ValueError(f"unknown method {method!r}")
     if engine == "dp":
         return dp_solve(profile, platform, alpha=alpha,
                         total_micro_batches=total_micro_batches,

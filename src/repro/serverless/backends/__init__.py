@@ -1,0 +1,79 @@
+"""Pluggable execution backends for the storage-backed runtime engine.
+
+One :class:`ExecutionBackend` is one storage+invocation substrate a
+:class:`~repro.api.DeploymentPlan` can execute on:
+
+    emulated   virtual-clock object store + per-worker clocks — behavior-
+               and cost-model-identical to the analytic stack (default)
+    local      real wall-clock: S x d concurrent worker threads over a
+               blocking in-memory (or filesystem) store — exercises the
+               visibility/ordering races the virtual clock never hits,
+               trains to bit-identical params
+    aws / oss  real-platform stubs (boto3 / oss2 adapters not vendored)
+
+Select by name anywhere a plan executes::
+
+    plan.emulate(backend="local")
+    session(...).emulate(backend="local")
+    python -m repro emulate plan.json --backend local
+
+Third-party backends register with :func:`register_backend`.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Union
+
+from repro.serverless.backends.base import (  # noqa: F401
+    ExecutionBackend,
+    StepTiming,
+    WorkerContext,
+)
+from repro.serverless.backends.cloud import (  # noqa: F401
+    AliyunOssBackend,
+    AwsS3Backend,
+    BackendUnavailableError,
+)
+from repro.serverless.backends.emulated import (  # noqa: F401
+    EmulatedBackend,
+    EmulatedWorkerContext,
+)
+from repro.serverless.backends.local import (  # noqa: F401
+    LocalBackend,
+    LocalStore,
+    LocalWorkerContext,
+)
+
+_REGISTRY: Dict[str, Callable[[], ExecutionBackend]] = {}
+
+
+def register_backend(name: str,
+                     factory: Callable[[], ExecutionBackend]) -> None:
+    """Register a backend factory under ``name`` (overwrites allowed, so a
+    real adapter can shadow a stub)."""
+    _REGISTRY[name] = factory
+
+
+def available_backends() -> tuple:
+    """Registered backend names, stable order."""
+    return tuple(sorted(_REGISTRY))
+
+
+def get_backend(spec: Union[str, ExecutionBackend]) -> ExecutionBackend:
+    """Resolve a backend: an instance passes through (pre-configured
+    backends, e.g. ``LocalBackend(fs_root=...)``); a name constructs a fresh
+    instance from the registry."""
+    if isinstance(spec, ExecutionBackend):
+        return spec
+    try:
+        factory = _REGISTRY[spec]
+    except (KeyError, TypeError):
+        raise KeyError(
+            f"unknown execution backend {spec!r}; available: "
+            f"{', '.join(available_backends())}") from None
+    return factory()
+
+
+register_backend("emulated", EmulatedBackend)
+register_backend("local", LocalBackend)
+register_backend("aws", AwsS3Backend)
+register_backend("oss", AliyunOssBackend)

@@ -1,0 +1,142 @@
+"""The execution-backend contract behind ``DeploymentPlan.emulate()``.
+
+FuncPipe's deployment story is a *plan* executing on a storage+invocation
+substrate: AWS Lambda + S3, Alibaba FC + OSS, or — here — substitutes that
+run on one host.  An :class:`ExecutionBackend` is exactly that substrate,
+split into the two interfaces the paper's workers need:
+
+* an **object store** (``put``/``get``/``delete``/``keys``, byte accounting
+  via :class:`~repro.serverless.runtime.store.StoreStats`, and a visibility
+  rule — virtual ``visible_at`` timestamps or real blocking gets);
+* a **worker-invocation surface**: spawn the plan's ``S x d`` stage workers
+  and drive each one's per-step program (:class:`WorkerContext`), either on
+  a per-worker virtual clock or on real concurrent threads.
+
+The GPipe orchestrator (``runtime.engine``) expresses each worker's training
+step as a *generator program* over its :class:`WorkerContext` — download,
+compute, upload, a fwd/bwd phase fence, then a ``("sync", grad_vector)``
+yield that the backend answers with the reduced gradient.  The engine never
+touches a store or a clock directly; a real boto3/OSS backend slots in by
+implementing this module's two classes and registering a name.
+
+Time semantics are the one axis backends may legitimately differ on
+(``wall_clock``): the emulated backend charges the paper's cost model on a
+virtual clock, the local backend measures the host.  *Numerics may not
+differ*: a plan replayed on any backend must train to bit-identical params.
+"""
+from __future__ import annotations
+
+from abc import ABC, abstractmethod
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Generator, Optional, Tuple
+
+from repro.serverless.runtime.store import StoreStats, assert_store_drained
+
+# a worker's per-step program: yields None after each fwd/bwd micro-batch op
+# group, then yields ("sync", grad_vector_or_None) and receives the reduced
+# vector via .send(); see engine._worker_step_program
+WorkerProgram = Generator[Optional[Tuple[str, Any]], Any, None]
+
+
+@dataclass(frozen=True)
+class StepTiming:
+    """What one executed training step cost on the backend's clock.
+
+    ``end`` is the step's completion time measured from the start of the run
+    (virtual seconds on the emulated clock, host seconds on wall-clock
+    backends) — monotone across steps, so the engine derives per-iteration
+    time as ``end_of_last_step / steps``.  ``sync`` is the slowest stage's
+    scatter-reduce duration within the step.
+    """
+
+    end: float
+    sync: float
+
+
+class WorkerContext(ABC):
+    """One stage worker's handle onto the backend: its serial resources
+    (CPU, uplink, downlink) and its view of the shared object store.
+
+    ``download``/``compute`` return opaque *tokens* that express data
+    dependencies to virtual-clock backends (the engine passes a download's
+    token as ``compute(after=...)``); wall-clock backends return ``None``
+    and rely on real blocking order.
+    """
+
+    @abstractmethod
+    def download(self, key: str) -> Tuple[Any, Any]:
+        """Fetch-and-consume ``key``: waits for visibility, charges the
+        downlink, frees the object (every pipeline boundary object has
+        exactly one consumer).  Returns ``(value, token)``."""
+
+    @abstractmethod
+    def compute(self, cost_s: float, fn: Optional[Callable[[], Any]] = None,
+                after: Any = None) -> Any:
+        """Charge ``cost_s`` of serial CPU (starting no earlier than the
+        ``after`` token) and run the real math ``fn`` if given.  Returns
+        ``fn()``'s result (or None)."""
+
+    @abstractmethod
+    def upload(self, key: str, nbytes: float, value: Any = None) -> Any:
+        """Publish ``value`` under ``key``, charging ``nbytes`` on the
+        uplink; the object becomes visible to downloads when the upload
+        completes.  Returns a token."""
+
+    @abstractmethod
+    def phase_barrier(self) -> None:
+        """Program-order fence between the forward and backward phases: the
+        worker issues no backward download before its forward uploads are
+        done (virtual clocks must model this; real serial workers get it
+        for free)."""
+
+
+class ExecutionBackend(ABC):
+    """One storage+invocation substrate a DeploymentPlan can execute on.
+
+    Lifecycle: ``open(agg)`` provisions the store and the ``S x d`` worker
+    slots for one run; ``context(s, r)`` hands out worker handles;
+    ``run_step(k, programs, ...)`` drives one training step's programs to
+    completion (answering their sync yields) and reports its timing;
+    ``close()`` tears down.  ``verify_drained()`` asserts the byte-
+    conservation invariant — puts == deletes, nothing residual — after the
+    final step.
+    """
+
+    #: registry name (see ``repro.serverless.backends.get_backend``)
+    name: str = "?"
+    #: True when timings are host wall-clock (local/real platforms); False
+    #: when the backend charges the paper's cost model on a virtual clock
+    wall_clock: bool = False
+
+    @abstractmethod
+    def open(self, agg) -> None:
+        """Provision the store + worker slots for one run of the plan whose
+        per-stage cost terms are ``agg`` (``simulator.StageAggregates``)."""
+
+    @abstractmethod
+    def context(self, s: int, r: int) -> WorkerContext:
+        """The handle for stage ``s``, replica ``r`` (valid after open)."""
+
+    @abstractmethod
+    def run_step(self, k: int, programs: Dict[Tuple[int, int], WorkerProgram],
+                 *, pipelined_sync: bool = True) -> StepTiming:
+        """Drive every worker's step-``k`` program to completion, including
+        the scatter-reduce each program requests via its ``("sync", vec)``
+        yield, and return the step's timing."""
+
+    @property
+    @abstractmethod
+    def store_stats(self) -> StoreStats:
+        """Byte-accounting counters of the run's object store."""
+
+    def verify_drained(self) -> None:
+        """Raise if the store holds residual objects or the put/delete byte
+        accounting does not conserve (see ``store.assert_store_drained``)."""
+        assert_store_drained(self._store_for_verification())
+
+    @abstractmethod
+    def _store_for_verification(self):
+        """The underlying store object (must expose keys/live_bytes/stats)."""
+
+    def close(self) -> None:
+        """Release resources (thread pools, temp dirs).  Idempotent."""

@@ -1,0 +1,80 @@
+"""Real-platform backend stubs: AWS Lambda + S3 and Alibaba FC + OSS.
+
+The :class:`ExecutionBackend` contract is everything a real platform needs
+to implement — an object-store client (`put`/`get`/`delete` with the
+platform's visibility semantics) plus a function-invocation surface for the
+``S x d`` stage workers.  The clients themselves (``boto3`` / ``oss2``) are
+not vendored here; these stubs register the names, carry the wiring notes,
+and fail *at open time* with an actionable message, so ``get_backend("aws")``
+is a valid call today and a drop-in implementation tomorrow — no solver,
+driver or CLI change needed when the real clients land.
+"""
+from __future__ import annotations
+
+import importlib.util
+
+from repro.serverless.backends.base import ExecutionBackend
+
+
+class BackendUnavailableError(NotImplementedError):
+    """A registered backend name whose implementation is not present in this
+    environment (cloud stubs).  Subclasses NotImplementedError so generic
+    callers still recognize it, while the CLI can catch this type alone
+    without masking genuine NotImplementedError bugs."""
+
+
+class _CloudStub(ExecutionBackend):
+    """Shared stub behavior: name the missing client, fail on open()."""
+
+    wall_clock = True
+    client_module = "?"
+    platform_blurb = "?"
+
+    def _unavailable(self) -> "BackendUnavailableError":
+        have_client = importlib.util.find_spec(self.client_module) is not None
+        detail = (
+            f"the {self.client_module!r} client is importable but the "
+            f"{self.name} backend's store/invoke adapters are not "
+            "implemented yet"
+            if have_client else
+            f"requires the {self.client_module!r} client, which is not "
+            "installed in this environment"
+        )
+        return BackendUnavailableError(
+            f"backend {self.name!r} ({self.platform_blurb}) is a stub: "
+            f"{detail}.  Replay the plan on 'emulated' (virtual-clock cost "
+            "model) or 'local' (real concurrency on this host) instead; the "
+            "same DeploymentPlan JSON will drive the real backend unchanged "
+            "once it lands.")
+
+    def open(self, agg) -> None:
+        raise self._unavailable()
+
+    def context(self, s: int, r: int):  # pragma: no cover - open() raises
+        raise self._unavailable()
+
+    def run_step(self, k, programs, *, pipelined_sync=True):  # pragma: no cover
+        raise self._unavailable()
+
+    @property
+    def store_stats(self):  # pragma: no cover - open() raises first
+        raise self._unavailable()
+
+    def _store_for_verification(self):  # pragma: no cover
+        raise self._unavailable()
+
+
+class AwsS3Backend(_CloudStub):
+    """AWS Lambda workers synchronizing through S3 (paper §5.1 setup)."""
+
+    name = "aws"
+    client_module = "boto3"
+    platform_blurb = "AWS Lambda + S3"
+
+
+class AliyunOssBackend(_CloudStub):
+    """Alibaba Function Compute workers synchronizing through OSS (§5.7)."""
+
+    name = "oss"
+    client_module = "oss2"
+    platform_blurb = "Alibaba Function Compute + OSS"

@@ -1,0 +1,296 @@
+"""Wall-clock backend: real concurrent stage workers on one host.
+
+Where the emulated backend *models* serverless execution on a virtual clock,
+this backend *performs* it: the plan's ``S x d`` stage workers run as real
+threads, exchanging every boundary activation, gradient and scatter-reduce
+chunk through a thread-safe :class:`LocalStore` whose ``get`` genuinely
+blocks until the producer's ``put`` lands — the storage-visibility and
+ordering races of a real platform, which the deterministic virtual-clock
+interleave can never hit.  Numerics are the point: a plan replayed here must
+train to params bit-identical to the emulated backend (same JAX stage math,
+same ring-ordered fp32 reduction — see ``tests/test_backends.py``).
+
+Time is host wall-clock (``wall_clock=True``): ``t_iter`` measures this
+machine, not Lambda, so cost/time outputs are only self-relative; modeled
+compute costs are ignored (no sleeping) and the *modeled* byte sizes are
+still recorded in ``StoreStats`` so byte accounting matches the emulated
+backend object-for-object.
+
+The store is dict-backed by default; pass ``fs_root`` to spill every payload
+through files (pickle round-trip per object) — closer to an object-store
+client, useful for exercising serialization of the values that would cross
+S3/OSS.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.serverless.backends.base import (
+    ExecutionBackend,
+    StepTiming,
+    WorkerContext,
+    WorkerProgram,
+)
+from repro.serverless.runtime.scatter_reduce import local_scatter_reduce
+from repro.serverless.runtime.store import StoreStats
+
+# deadlock backstop: a blocking get that outwaits this is a lost producer
+# (a peer worker thread died), not a slow one
+DEFAULT_GET_TIMEOUT = 120.0
+
+# S x d real threads; past this the run would be measuring the host's
+# scheduler, not the plan — replay large plans on the emulated backend
+MAX_WORKERS = 256
+
+
+@dataclass
+class _Stored:
+    nbytes: float
+    value: Any = None
+    path: Optional[str] = None
+
+
+class LocalStore:
+    """Thread-safe key -> object namespace with *blocking* visibility.
+
+    ``put`` makes the object immediately visible and wakes waiters; ``get``
+    blocks until the key exists (raising ``TimeoutError`` after ``timeout``
+    seconds so a dead producer fails the run instead of hanging it);
+    ``take`` is the fetch-and-consume used for single-consumer pipeline
+    boundary objects.  ``nbytes`` is the *modeled* object size (the same
+    numbers the emulated store charges), kept for byte accounting; payloads
+    ride in memory, or through ``fs_root`` files when given.
+    """
+
+    def __init__(self, timeout: float = DEFAULT_GET_TIMEOUT,
+                 fs_root: Optional[str] = None):
+        self.timeout = timeout
+        self.fs_root = fs_root
+        self._cv = threading.Condition()
+        self._objects: Dict[str, _Stored] = {}
+        self._live_bytes = 0.0
+        self._seq = 0
+        self.stats = StoreStats()
+        if fs_root is not None:
+            os.makedirs(fs_root, exist_ok=True)
+
+    # ----------------------------------------------------------- fs payloads
+    def _spill(self, value: Any) -> Optional[str]:
+        if self.fs_root is None or value is None:
+            return None
+        with self._cv:
+            self._seq += 1
+            path = os.path.join(self.fs_root, f"obj-{self._seq}.pkl")
+        with open(path, "wb") as f:
+            pickle.dump(value, f)
+        return path
+
+    @staticmethod
+    def _load(obj: _Stored) -> Any:
+        if obj.path is None:
+            return obj.value
+        with open(obj.path, "rb") as f:
+            return pickle.load(f)
+
+    # ------------------------------------------------------------ store API
+    def put(self, key: str, nbytes: float, value: Any = None) -> None:
+        path = self._spill(value)
+        with self._cv:
+            prev = self._objects.get(key)
+            if prev is not None:
+                # overwrite frees the old object: count the implicit delete
+                # (and its spill file) so drain accounting stays conserved
+                self._live_bytes -= prev.nbytes
+                self.stats.deletes += 1
+                self.stats.bytes_deleted += prev.nbytes
+                if prev.path is not None:
+                    try:
+                        os.remove(prev.path)
+                    except OSError:
+                        pass
+            obj = _Stored(nbytes=float(nbytes),
+                          value=None if path is not None else value, path=path)
+            self._objects[key] = obj
+            self._live_bytes += obj.nbytes
+            self.stats.puts += 1
+            self.stats.bytes_in += obj.nbytes
+            self.stats.peak_bytes = max(self.stats.peak_bytes,
+                                        self._live_bytes)
+            self._cv.notify_all()
+
+    def _wait_for(self, key: str) -> _Stored:
+        ok = self._cv.wait_for(lambda: key in self._objects,
+                               timeout=self.timeout)
+        if not ok:
+            raise TimeoutError(
+                f"object {key!r} never became visible within "
+                f"{self.timeout:.0f}s — a producer worker likely died")
+        return self._objects[key]
+
+    def get(self, key: str) -> Any:
+        """Block until ``key`` is visible, then return its payload."""
+        with self._cv:
+            obj = self._wait_for(key)
+            self.stats.gets += 1
+            self.stats.bytes_out += obj.nbytes
+        return self._load(obj)
+
+    def take(self, key: str) -> Any:
+        """Blocking fetch-and-consume (get + delete, atomically)."""
+        with self._cv:
+            obj = self._wait_for(key)
+            self.stats.gets += 1
+            self.stats.bytes_out += obj.nbytes
+            value = self._load(obj)   # before delete unlinks any spill file
+            self._delete_locked(key)
+        return value
+
+    def delete(self, key: str) -> None:
+        with self._cv:
+            self._delete_locked(key)
+
+    def _delete_locked(self, key: str) -> None:
+        obj = self._objects.pop(key, None)
+        if obj is not None:
+            self._live_bytes -= obj.nbytes
+            self.stats.deletes += 1
+            self.stats.bytes_deleted += obj.nbytes
+            if obj.path is not None:
+                try:
+                    os.remove(obj.path)
+                except OSError:
+                    pass
+
+    def keys(self):
+        with self._cv:
+            return list(self._objects)
+
+    def __contains__(self, key: str) -> bool:
+        with self._cv:
+            return key in self._objects
+
+    def __len__(self) -> int:
+        with self._cv:
+            return len(self._objects)
+
+    @property
+    def live_bytes(self) -> float:
+        return self._live_bytes
+
+
+class LocalWorkerContext(WorkerContext):
+    """A stage worker on a real thread: blocking store, no modeled clock."""
+
+    def __init__(self, store: LocalStore):
+        self.store = store
+
+    def download(self, key: str):
+        return self.store.take(key), None
+
+    def compute(self, cost_s: float, fn: Optional[Callable[[], Any]] = None,
+                after: Any = None) -> Any:
+        # modeled cost is the virtual clock's business; here compute is real
+        return fn() if fn is not None else None
+
+    def upload(self, key: str, nbytes: float, value: Any = None) -> Any:
+        self.store.put(key, nbytes, value=value)
+        return None
+
+    def phase_barrier(self) -> None:
+        # a serial worker's forward uploads complete before it proceeds
+        return None
+
+
+class LocalBackend(ExecutionBackend):
+    """Real-concurrency substitute platform on the host."""
+
+    name = "local"
+    wall_clock = True
+
+    def __init__(self, *, fs_root: Optional[str] = None,
+                 get_timeout: float = DEFAULT_GET_TIMEOUT):
+        self.fs_root = fs_root
+        self.get_timeout = get_timeout
+        self.agg = None
+        self.store: Optional[LocalStore] = None
+        self._t0 = 0.0
+
+    # --------------------------------------------------------------- lifecycle
+    def open(self, agg) -> None:
+        if agg.S * agg.d > MAX_WORKERS:
+            raise ValueError(
+                f"plan spawns {agg.S}x{agg.d}={agg.S * agg.d} concurrent "
+                f"workers; the local backend caps at {MAX_WORKERS} threads "
+                "— replay this plan on the emulated backend instead")
+        self.agg = agg
+        self.store = LocalStore(timeout=self.get_timeout,
+                                fs_root=self.fs_root)
+        self._t0 = time.perf_counter()
+
+    def context(self, s: int, r: int) -> LocalWorkerContext:
+        return LocalWorkerContext(self.store)
+
+    @property
+    def store_stats(self) -> StoreStats:
+        return self.store.stats
+
+    def _store_for_verification(self):
+        return self.store
+
+    # --------------------------------------------------------------- stepping
+    def run_step(self, k: int, programs: Dict[Tuple[int, int], WorkerProgram],
+                 *, pipelined_sync: bool = True) -> StepTiming:
+        agg = self.agg
+        S, d = agg.S, agg.d
+        # the barrier timeout mirrors the store's: a peer that never arrives
+        # (died worker) breaks the barrier instead of hanging the run
+        barriers = ({s: threading.Barrier(d, timeout=self.get_timeout)
+                     for s in range(S)} if d > 1 else {})
+        sync_secs: Dict[Tuple[int, int], float] = {}
+        errors: List[BaseException] = []
+        err_lock = threading.Lock()
+
+        def drive(s: int, r: int, gen: WorkerProgram) -> None:
+            try:
+                y = next(gen)
+                while True:
+                    if isinstance(y, tuple) and y[0] == "sync":
+                        t0 = time.perf_counter()
+                        reduced = local_scatter_reduce(
+                            self.store, r, d, agg.s_stage[s], y[1],
+                            key_prefix=f"k{k}/sync{s}",
+                            pipelined=pipelined_sync, barrier=barriers.get(s))
+                        sync_secs[(s, r)] = time.perf_counter() - t0
+                        y = gen.send(reduced)
+                    else:
+                        y = next(gen)
+            except StopIteration:
+                return
+            except BaseException as e:  # propagate to the main thread
+                with err_lock:
+                    errors.append(e)
+                # a died worker starves its peers' blocking gets; their
+                # store timeout turns the hang into a TimeoutError
+
+        threads = [
+            threading.Thread(target=drive, args=(s, r, gen),
+                             name=f"funcpipe-s{s}r{r}", daemon=True)
+            for (s, r), gen in programs.items()
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            raise errors[0]
+
+        sync = 0.0
+        for s in range(S):
+            stage = [sync_secs.get((s, r), 0.0) for r in range(d)]
+            sync = max(sync, max(stage))
+        return StepTiming(end=time.perf_counter() - self._t0, sync=sync)

@@ -93,6 +93,7 @@ class FuncPipeResult:
     sims: List[SimResult]
     recommended: int  # index into plans/sims
     deployment_plans: Optional[List] = None  # DeploymentPlans when replayed
+    engine_results: Optional[List] = None    # EngineResults when executed
 
     @property
     def recommended_sim(self) -> SimResult:
@@ -112,15 +113,24 @@ def funcpipe_replay(
     deployment_plans: Sequence,
     *,
     contention: bool = False,
+    backend: Optional[str] = None,
+    engine_steps: int = 1,
 ) -> Optional[FuncPipeResult]:
     """The FuncPipe policy over saved :class:`repro.api.DeploymentPlan`
     artifacts — no solver run.  Each plan is resolved (fingerprint-checked
     against its recorded model/platform), identical configs are deduped,
     then simulated under this call's ``contention`` setting and fed through
-    the same §5.1 recommendation as :func:`funcpipe`."""
+    the same §5.1 recommendation as :func:`funcpipe`.
+
+    With ``backend`` set (``"emulated"``, ``"local"``, or any registered
+    execution backend), every kept plan is additionally *executed* through
+    the storage-backed engine on that backend for ``engine_steps`` steps
+    (timing axis), and the per-plan ``EngineResult``s ride along on
+    ``FuncPipeResult.engine_results``."""
     from repro.core.perfmodel import evaluate
 
     uniq, sims, kept = [], [], []
+    engine_results: Optional[List] = [] if backend is not None else None
     seen = set()
     for p in deployment_plans:
         key = (p.x, p.d, p.z)       # dedupe before the profile rebuild
@@ -137,12 +147,20 @@ def funcpipe_replay(
         sims.append(simulate_funcpipe(
             rp.profile, rp.platform, rp.config, rp.total_micro_batches,
             pipelined_sync=rp.pipelined_sync, contention=contention))
+        if engine_results is not None:
+            from repro.serverless.runtime import run_plan
+
+            engine_results.append(run_plan(
+                rp.profile, rp.platform, rp.config, rp.total_micro_batches,
+                steps=engine_steps, pipelined_sync=rp.pipelined_sync,
+                contention=contention, backend=backend))
         kept.append(p)
     if not uniq:
         return None
     rec = uniq.index(planner.recommend(uniq))
     return FuncPipeResult(plans=uniq, sims=sims, recommended=rec,
-                          deployment_plans=kept)
+                          deployment_plans=kept,
+                          engine_results=engine_results)
 
 
 def funcpipe(

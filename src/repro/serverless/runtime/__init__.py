@@ -2,18 +2,25 @@
 for the analytic stack: perfmodel eq (7) -> simulator DP -> this runtime).
 
     store          emulated object store + per-worker virtual clocks
-    scatter_reduce storage collectives: pipelined eq (2) vs 3-phase eq (1)
+    scatter_reduce storage collectives: pipelined eq (2) vs 3-phase eq (1),
+                   emulated and wall-clock (thread-concurrent) forms
     worker         stage workers running real JAX for their layer range
-    engine         GPipe orchestration of a planner Config for K steps
+    engine         GPipe orchestration of a planner Config for K steps,
+                   executing on a pluggable ``repro.serverless.backends``
+                   ExecutionBackend (emulated | local | ...)
 """
 from repro.serverless.runtime.engine import EngineResult, Execution, run_plan  # noqa: F401
 from repro.serverless.runtime.scatter_reduce import (  # noqa: F401
+    local_scatter_reduce,
     pipelined_scatter_reduce,
+    ring_reduce,
     three_phase_scatter_reduce,
 )
 from repro.serverless.runtime.store import (  # noqa: F401
     ObjectStore,
     StageChannel,
+    StoreStats,
+    assert_store_drained,
     effective_bandwidth,
 )
 from repro.serverless.runtime.worker import (  # noqa: F401

@@ -1,45 +1,59 @@
-"""Orchestrator: run a FuncPipe plan end-to-end through the emulated store.
+"""Orchestrator: run a FuncPipe plan end-to-end through an execution backend.
 
 Takes a profiled model + platform + planner configuration and executes the
-GPipe schedule of Fig 3 for K steps on an ``S x d`` grid of emulated
-serverless workers: per replica, all micro-batch forwards flow downstream
-through activation keys, the reversed backwards flow gradient keys upstream,
-then each stage's ``d`` replicas synchronize with a storage scatter-reduce
-(pipelined eq (2) or the 3-phase eq (1) baseline).  Every byte moves through
-:class:`ObjectStore`; every task charges the virtual clock with the same
-per-stage costs the analytic simulator uses (``simulator.stage_aggregates``),
-so the engine's simulated iteration time independently validates
-``simulate_funcpipe`` — and, with an :class:`Execution` attached, the
-workers run *real JAX* for their layers, validating the plan's numerics
-against the monolithic training path.
+GPipe schedule of Fig 3 for K steps on an ``S x d`` grid of serverless
+workers: per replica, all micro-batch forwards flow downstream through
+activation keys, the reversed backwards flow gradient keys upstream, then
+each stage's ``d`` replicas synchronize with a storage scatter-reduce
+(pipelined eq (2) or the 3-phase eq (1) baseline).
 
-Two axes of use:
+The orchestrator talks *only* to the :class:`ExecutionBackend` protocol
+(``repro.serverless.backends``): each worker's step is expressed once, as a
+generator program over its :class:`WorkerContext` (download, compute,
+upload, phase fence, sync request), and the backend decides what a clock and
+a store are —
+
+  * ``backend="emulated"`` (default): virtual clocks charging the same
+    per-stage costs as the analytic simulator (``simulator.stage_aggregates``),
+    so the engine's simulated iteration time independently validates
+    ``simulate_funcpipe``;
+  * ``backend="local"``: the programs run on real concurrent threads over a
+    blocking wall-clock store — actual visibility/ordering races, host
+    timings, bit-identical trained params.
+
+Two axes of use on any backend:
 
   * timing-only (``execution=None``): objects carry sizes, not values; used
     by ``benchmarks/runtime_accuracy.py`` for the three-level accuracy table.
-  * numeric (``execution=Execution(...)``): K full training steps; final
-    params match a monolithic fp32 loop within summation-order noise.
+  * numeric (``execution=Execution(...)``): K full training steps with real
+    JAX stage workers; final params match a monolithic fp32 loop within
+    summation-order noise — and match *bit-for-bit* across backends.
 
 Not charged (matching the simulator): input-batch fetches (the shared-
 nothing synthetic loader regenerates shards in-function, ``data.synthetic``),
 the optimizer update FLOPs, and function cold-starts.
+
+After the last step the engine verifies the store drained — every put
+deleted, bytes conserved — on whichever backend ran (the paper's storage
+bill depends on exactly this invariant holding across steps).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.partition import ModelProfile
 from repro.core.perfmodel import Config
 from repro.serverless.platform import GB, Platform
-from repro.serverless.runtime.scatter_reduce import (
-    pipelined_scatter_reduce,
-    three_phase_scatter_reduce,
-)
-from repro.serverless.runtime.store import ObjectStore, StageChannel, StoreStats
+from repro.serverless.runtime.store import StoreStats
 from repro.serverless.simulator import stage_aggregates, unpack_plan_args
+
+if TYPE_CHECKING:
+    # typing only: backends imports runtime.store, so the runtime package
+    # must not import backends at module scope (get_backend is pulled in
+    # lazily inside run_plan)
+    from repro.serverless.backends import ExecutionBackend, WorkerContext
 
 
 @dataclass(frozen=True)
@@ -56,12 +70,14 @@ class Execution:
 
 @dataclass(frozen=True)
 class EngineResult:
-    t_iter: float                 # simulated seconds per training iteration
-    t_total: float                # simulated seconds for all steps
+    t_iter: float                 # seconds per training iteration (backend clock)
+    t_total: float                # seconds for all steps (backend clock)
     steps: int
     cost: float                   # $ per iteration (GB-s pricing, all workers)
     n_workers: int
     total_mem_gb: float
+    backend: str = "emulated"     # which ExecutionBackend executed the plan
+    wall_clock: bool = False      # True: t_* are host seconds, not modeled
     breakdown: Dict[str, float] = field(default_factory=dict)
     metrics: List[Dict[str, float]] = field(default_factory=list)  # per step
     params: Optional[dict] = None          # final assembled params (numeric mode)
@@ -87,6 +103,67 @@ def _split_batch(batch: dict, r: int, d: int, m: int, mu: int):
     return jax.tree.map(sl, batch)
 
 
+def _worker_step_program(ctx: WorkerContext, *, k: int, s: int, r: int, agg,
+                         worker, batch, losses: Dict) -> Any:
+    """One stage worker's step-``k`` program over its backend context.
+
+    The single expression of the GPipe schedule from a worker's point of
+    view, shared by every backend: ``mu`` forward micro-batches (yield after
+    each op group so virtual-clock drivers can interleave workers), the
+    fwd/bwd phase fence, ``mu`` backwards in reverse order, then a
+    ``("sync", grad_vector)`` yield answered by the backend with the reduced
+    gradient, from which the worker applies its optimizer update.
+    """
+    S, mu, d = agg.S, agg.mu, agg.d
+    ce_acc = 0.0
+    aux_acc = 0.0
+
+    # ---------------------------------------------------------------- forward
+    for m in range(mu):
+        x_val, dep = (None, None)
+        if s > 0:
+            x_val, dep = ctx.download(f"k{k}/r{r}/m{m}/act{s - 1}")
+        fn = None
+        if worker is not None:
+            batch_mb = _split_batch(batch, r, d, m, mu)
+            fn = (lambda x_val=x_val, batch_mb=batch_mb, m=m:
+                  worker.forward(m, x_val, batch_mb))
+        res = ctx.compute(agg.t_fc[s], fn, after=dep)
+        out = None
+        if worker is not None:
+            out, aux = res
+            aux_acc += aux / (mu * d)
+            if s == S - 1:
+                ce_acc += float(out) / (mu * d)
+        if s < S - 1:
+            ctx.upload(f"k{k}/r{r}/m{m}/act{s}", agg.out_b[s], value=out)
+        yield
+
+    # program order: backward downloads wait for forward uploads
+    ctx.phase_barrier()
+
+    # --------------------------------------------------------------- backward
+    for m in range(mu - 1, -1, -1):
+        g_in, dep = (None, None)
+        if s < S - 1:
+            g_in, dep = ctx.download(f"k{k}/r{r}/m{m}/grad{s}")
+        fn = None
+        if worker is not None:
+            fn = lambda g_in=g_in, m=m: worker.backward(m, g_in)  # noqa: E731
+        g_out = ctx.compute(agg.t_bc[s], fn, after=dep)
+        if s > 0:
+            ctx.upload(f"k{k}/r{r}/m{m}/grad{s - 1}", agg.grad_b[s],
+                       value=g_out)
+        yield
+
+    # ------------------------------------------------------------------- sync
+    vec = worker.grad_vector() if worker is not None else None
+    reduced = yield ("sync", vec)
+    if worker is not None:
+        worker.apply_update(reduced / d, step=k)
+        losses[(s, r)] = (ce_acc, aux_acc)
+
+
 def run_plan(
     profile,
     platform: Optional[Platform] = None,
@@ -97,22 +174,24 @@ def run_plan(
     pipelined_sync: Optional[bool] = None,
     contention: bool = False,
     execution: Optional[Execution] = None,
+    backend: Union[str, ExecutionBackend] = "emulated",
 ) -> EngineResult:
-    """Execute ``steps`` training iterations of the plan through the store.
+    """Execute ``steps`` training iterations of the plan through a backend.
 
     Accepts either the explicit ``(profile, platform, config, M)`` tuple or a
     single :class:`repro.api.DeploymentPlan` as the first argument (see
-    ``simulator.unpack_plan_args``)."""
+    ``simulator.unpack_plan_args``).  ``backend`` is a registry name
+    (``emulated``, ``local``, ...) or a pre-configured
+    :class:`ExecutionBackend` instance."""
+    from repro.serverless.backends import get_backend
+
     profile, platform, config, total_micro_batches, pipelined_sync = \
         unpack_plan_args("run_plan", profile, platform, config,
                          total_micro_batches, pipelined_sync)
     agg = stage_aggregates(profile, platform, config, total_micro_batches,
                            contention=contention)
     S, mu, d = agg.S, agg.mu, agg.d
-    store = ObjectStore(latency=agg.t_lat)
-    channels = [[StageChannel(store, agg.w[s], agg.t_lat, name=f"s{s}r{r}")
-                 for r in range(d)] for s in range(S)]
-    sync_fn = pipelined_scatter_reduce if pipelined_sync else three_phase_scatter_reduce
+    be = get_backend(backend)
 
     workers = None
     if execution is not None:
@@ -125,93 +204,35 @@ def run_plan(
                                 jit=execution.jit, remat=execution.remat)
                     for r in range(d)] for s in range(S)]
 
+    be.open(agg)
     metrics: List[Dict[str, float]] = []
     iter_ends: List[float] = []
     sync_durations: List[float] = []
 
-    for k in range(steps):
-        batch = execution.batch_fn(k) if execution is not None else None
-        ce_sum = 0.0
-        aux_sum = 0.0
-
-        # ---------------------------------------------------------- forward
-        for r in range(d):
-            for m in range(mu):
-                for s in range(S):
-                    ch = channels[s][r]
-                    x_val = None
-                    if s > 0:
-                        key = f"k{k}/r{r}/m{m}/act{s - 1}"
-                        x_val, _ = ch.download(key)
-                        store.delete(key)
-                    t_ready = ch.cpu_free if s == 0 else ch.dn_free
-                    ch.compute(agg.t_fc[s], ready=t_ready)
-                    out = None
-                    if workers is not None:
-                        batch_mb = _split_batch(batch, r, d, m, mu)
-                        out, aux = workers[s][r].forward(m, x_val, batch_mb)
-                        aux_sum += aux / (mu * d)
-                        if s == S - 1:
-                            ce_sum += float(out) / (mu * d)
-                    if s < S - 1:
-                        ch.upload(f"k{k}/r{r}/m{m}/act{s}", agg.out_b[s],
-                                  ready=ch.cpu_free, value=out)
-
-        # program order: backward downloads wait for forward uploads
-        for row in channels:
-            for ch in row:
-                ch.join_uplink_into_downlink()
-
-        # --------------------------------------------------------- backward
-        for r in range(d):
-            for m in range(mu - 1, -1, -1):
-                for s in range(S - 1, -1, -1):
-                    ch = channels[s][r]
-                    g_in_val = None
-                    if s < S - 1:
-                        key = f"k{k}/r{r}/m{m}/grad{s}"
-                        g_in_val, _ = ch.download(key)
-                        store.delete(key)
-                    t_ready = ch.cpu_free if s == S - 1 else ch.dn_free
-                    ch.compute(agg.t_bc[s], ready=t_ready)
-                    g_out = None
-                    if workers is not None:
-                        g_out = workers[s][r].backward(m, g_in_val)
-                    if s > 0:
-                        ch.upload(f"k{k}/r{r}/m{m}/grad{s - 1}",
-                                  agg.grad_b[s], ready=ch.cpu_free, value=g_out)
-
-        # ------------------------------------------------------------- sync
-        step_end = 0.0
-        step_sync = 0.0
-        for s in range(S):
-            row = channels[s]
-            done = [row[r].cpu_free if s == 0 else max(row[r].cpu_free, row[r].up_free)
-                    for r in range(d)]
-            values = None
+    try:
+        for k in range(steps):
+            batch = execution.batch_fn(k) if execution is not None else None
+            losses: Dict = {}
+            programs = {
+                (s, r): _worker_step_program(
+                    be.context(s, r), k=k, s=s, r=r, agg=agg,
+                    worker=None if workers is None else workers[s][r],
+                    batch=batch, losses=losses)
+                for s in range(S) for r in range(d)
+            }
+            timing = be.run_step(k, programs, pipelined_sync=pipelined_sync)
+            iter_ends.append(timing.end)
+            sync_durations.append(timing.sync)
             if workers is not None:
-                values = [workers[s][r].grad_vector() for r in range(d)]
-            if d > 1:
-                reduced, ends = sync_fn(
-                    store, row, agg.s_stage[s], done, values=values,
-                    key_prefix=f"k{k}/sync{s}")
-            else:
-                reduced, ends = (values[0] if values is not None else None), done
-            if workers is not None:
-                avg = reduced / d
-                for r in range(d):
-                    workers[s][r].apply_update(avg, step=k)
-            stage_end = max(ends)
-            step_sync = max(step_sync, stage_end - max(done))
-            step_end = max(step_end, stage_end)
-            for r in range(d):
-                row[r].release_at(ends[r])
-
-        if workers is not None:
-            metrics.append({"ce": ce_sum, "aux": aux_sum,
-                            "loss": ce_sum + aux_sum})
-        iter_ends.append(step_end)
-        sync_durations.append(step_sync)
+                ce_sum = sum(losses[(S - 1, r)][0] for r in range(d))
+                aux_sum = sum(losses[(s, r)][1]
+                              for s in range(S) for r in range(d))
+                metrics.append({"ce": ce_sum, "aux": aux_sum,
+                                "loss": ce_sum + aux_sum})
+        be.verify_drained()
+        stats = be.store_stats
+    finally:
+        be.close()
 
     t_total = iter_ends[-1]
     t_iter = t_total / steps
@@ -231,6 +252,8 @@ def run_plan(
         cost=float(cost),
         n_workers=agg.n_workers,
         total_mem_gb=mem_total / GB,
+        backend=be.name,
+        wall_clock=be.wall_clock,
         breakdown={
             "compute": comp,
             "pipeline_comm": float(max(0.0, t_iter - comp - sync_t)) if S > 1 else 0.0,
@@ -238,5 +261,5 @@ def run_plan(
         },
         metrics=metrics,
         params=params,
-        store_stats=store.stats,
+        store_stats=stats,
     )

@@ -51,13 +51,22 @@ def _cleanup(store: ObjectStore, key_prefix: str, n: int) -> None:
         store.delete(f"{key_prefix}/red/{j}")
 
 
+def ring_reduce(own, parts):
+    """The collective's deterministic fp32 reduction: start from the owned
+    chunk, add partials in the order given.  Both the emulated collectives
+    and the wall-clock :func:`local_scatter_reduce` reduce through this one
+    function (with partials in the same ring order), so trained params are
+    bit-identical across backends."""
+    acc = np.asarray(own, dtype=np.float32).copy()
+    for p in parts:
+        acc += np.asarray(p, dtype=np.float32)
+    return acc
+
+
 def _reduce_chunks(chunks, owner: int, n: int):
     """Owner's deterministic reduction order: own chunk, then ring order."""
-    acc = np.asarray(chunks[owner][owner], dtype=np.float32).copy()
-    for r in range(1, n):
-        src = (owner - r) % n
-        acc += np.asarray(chunks[src][owner], dtype=np.float32)
-    return acc
+    return ring_reduce(chunks[owner][owner],
+                       [chunks[(owner - r) % n][owner] for r in range(1, n)])
 
 
 def three_phase_scatter_reduce(
@@ -120,6 +129,69 @@ def three_phase_scatter_reduce(
     _cleanup(store, key_prefix, n)
     reduced = None if chunks is None else np.concatenate(reduced_chunks)
     return reduced, ends
+
+
+def local_scatter_reduce(
+    store,
+    index: int,
+    n: int,
+    nbytes: float,
+    value: Optional[np.ndarray],
+    *,
+    key_prefix: str,
+    pipelined: bool = True,
+    barrier=None,
+) -> Optional[np.ndarray]:
+    """One worker's share of the storage scatter-reduce on a *wall-clock*
+    store (``backends.local.LocalStore``): call from ``n`` concurrent worker
+    threads, each with its own ``index``.
+
+    Moves the same objects under the same keys as the emulated collectives
+    and reduces through :func:`ring_reduce` in the identical ring order, so
+    the returned vector is bit-identical to the virtual-clock backends' —
+    but here ``store.get`` genuinely *blocks* until the producer's put lands,
+    exercising the visibility/ordering races the virtual clock never hits.
+
+    ``pipelined=False`` inserts the two phase barriers of the LambdaML eq (1)
+    collective (``barrier`` must then be a ``threading.Barrier(n)``); the
+    pipelined eq (2) schedule needs no phase barriers — downlinks ride on
+    blocking visibility alone.  Either way one final barrier fences the
+    cleanup: a worker frees its reduced chunk only after every peer has
+    pulled it, which is what keeps the store drained across steps.
+    """
+    i = index
+    if n == 1:
+        return None if value is None else np.asarray(value, dtype=np.float32)
+    chunk_b = nbytes / n
+    chunks = None if value is None else np.array_split(np.asarray(value), n)
+
+    # scatter: upload my partials of everyone else's chunk, staggered order
+    for r in range(1, n):
+        j = (i + r) % n
+        store.put(f"{key_prefix}/part/{j}/{i}", chunk_b,
+                  value=None if chunks is None else chunks[j])
+    if not pipelined and barrier is not None:
+        barrier.wait()                    # eq (1) phase-1 barrier
+
+    # reduce: pull the n-1 partials of the owned chunk (blocking as they
+    # surface), reduce in ring order, publish the reduced chunk
+    parts = [store.take(f"{key_prefix}/part/{i}/{(i - r) % n}")
+             for r in range(1, n)]
+    reduced_i = None if chunks is None else ring_reduce(chunks[i], parts)
+    store.put(f"{key_prefix}/red/{i}", chunk_b, value=reduced_i)
+    if not pipelined and barrier is not None:
+        barrier.wait()                    # eq (1) phase-2 barrier
+
+    # all-gather: pull the other reduced chunks
+    out: List[Optional[np.ndarray]] = [None] * n
+    out[i] = reduced_i
+    for r in range(1, n):
+        src = (i + r) % n
+        out[src] = store.get(f"{key_prefix}/red/{src}")
+    if barrier is not None:
+        barrier.wait()                    # cleanup fence: all peers have read
+    store.delete(f"{key_prefix}/red/{i}")
+    return None if chunks is None else np.concatenate(out)
 
 
 def pipelined_scatter_reduce(

@@ -50,6 +50,7 @@ class StoreStats:
     deletes: int = 0
     bytes_in: float = 0.0
     bytes_out: float = 0.0
+    bytes_deleted: float = 0.0
     peak_bytes: float = 0.0
 
 
@@ -64,8 +65,13 @@ class ObjectStore:
 
     def put(self, key: str, nbytes: float, value: Any = None,
             visible_at: float = 0.0) -> StoredObject:
-        if key in self._objects:
-            self._live_bytes -= self._objects[key].nbytes
+        prev = self._objects.get(key)
+        if prev is not None:
+            # an overwrite implicitly frees the old object; count it so the
+            # puts==deletes / bytes conservation invariant stays meaningful
+            self._live_bytes -= prev.nbytes
+            self.stats.deletes += 1
+            self.stats.bytes_deleted += prev.nbytes
         obj = StoredObject(nbytes=float(nbytes), visible_at=visible_at, value=value)
         self._objects[key] = obj
         self._live_bytes += obj.nbytes
@@ -90,6 +96,10 @@ class ObjectStore:
         if obj is not None:
             self._live_bytes -= obj.nbytes
             self.stats.deletes += 1
+            self.stats.bytes_deleted += obj.nbytes
+
+    def keys(self):
+        return list(self._objects)
 
     def __contains__(self, key: str) -> bool:
         return key in self._objects
@@ -100,6 +110,36 @@ class ObjectStore:
     @property
     def live_bytes(self) -> float:
         return self._live_bytes
+
+    def assert_drained(self) -> None:
+        """Byte-accounting invariant at the end of a run: every uploaded
+        object was eventually consumed and freed (puts - deletes == residual
+        == nothing).  A leaked key here means a collective or the engine
+        forgot its cleanup — storage cost on a real platform would grow
+        without bound across training steps."""
+        assert_store_drained(self)
+
+
+def assert_store_drained(store) -> None:
+    """Shared drain/conservation check for any backend store (emulated or
+    wall-clock): no residual objects, object count conserved, and bytes
+    conserved up to float summation order."""
+    leftover = store.keys()
+    if leftover:
+        sample = ", ".join(sorted(leftover)[:8])
+        raise RuntimeError(
+            f"store not drained: {len(leftover)} residual objects "
+            f"({store.live_bytes:.0f} live bytes), e.g. [{sample}]")
+    st = store.stats
+    if st.puts != st.deletes:
+        raise RuntimeError(
+            f"store object count not conserved: {st.puts} puts vs "
+            f"{st.deletes} deletes with an empty store")
+    # different backends sum the same per-object sizes in different orders
+    if abs(st.bytes_in - st.bytes_deleted) > 1e-6 * max(st.bytes_in, 1.0):
+        raise RuntimeError(
+            f"store bytes not conserved: {st.bytes_in:.0f} uploaded vs "
+            f"{st.bytes_deleted:.0f} deleted with an empty store")
 
 
 class StageChannel:

@@ -32,3 +32,11 @@ def run_multidev(module: str, *args: str, devices: int = 8, timeout: int = 1200)
 @pytest.fixture(scope="session")
 def multidev():
     return run_multidev
+
+
+@pytest.fixture(autouse=True)
+def _isolated_plan_cache(tmp_path_factory, monkeypatch):
+    """Keep the CLI's default-on plan cache out of ~/.cache during tests:
+    every test gets a fresh, throwaway cache directory."""
+    monkeypatch.setenv("REPRO_PLAN_CACHE",
+                       str(tmp_path_factory.mktemp("plan-cache")))

@@ -269,6 +269,98 @@ def test_session_sweep_recommends():
         assert s.deployment_plan.solver == solver
 
 
+# --------------------------------------------------------------- plan cache
+def test_plan_cache_hits_and_returns_identical_plan(tmp_path):
+    cache_dir = tmp_path / "plans"
+    s1 = session("bert-large", platform="aws", global_batch=64,
+                 plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    assert s1.plan_cache.misses == 1 and s1.plan_cache.hits == 0
+    assert list(cache_dir.glob("plan-*.json"))
+
+    s2 = session("bert-large", platform="aws", global_batch=64,
+                 plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    assert s2.plan_cache.hits == 1 and s2.plan_cache.misses == 0
+    assert s2.deployment_plan == s1.deployment_plan
+    assert s2.deployment_plan.content_hash == s1.deployment_plan.content_hash
+    # the in-memory twin is rebuilt on hits, so sweep/recommend still work
+    assert s2.plan_result.config == s1.plan_result.config
+    assert s2.plan_result.objective == pytest.approx(s1.plan_result.objective)
+
+
+def test_plan_cache_keys_on_solver_inputs(tmp_path):
+    cache_dir = tmp_path / "plans"
+    kw = dict(platform="aws", global_batch=64, plan_cache=cache_dir)
+    session("bert-large", **kw).plan(alpha=ALPHA, **FAST)
+    # a different objective weight must miss, not alias
+    s = session("bert-large", **kw).plan(alpha=(1.0, 0.0), **FAST)
+    assert s.plan_cache.hits == 0 and s.plan_cache.misses == 1
+    # a different batch budget too
+    s = session("bert-large", platform="aws", global_batch=32,
+                plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    assert s.plan_cache.hits == 0
+
+
+def test_plan_cache_corrupt_entry_degrades_to_solve(tmp_path):
+    cache_dir = tmp_path / "plans"
+    s1 = session("bert-large", platform="aws", global_batch=64,
+                 plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    entry = next(cache_dir.glob("plan-*.json"))
+    entry.write_text("{not json")
+    s2 = session("bert-large", platform="aws", global_batch=64,
+                 plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    assert s2.plan_cache.hits == 0 and s2.plan_cache.misses == 1
+    # re-solved (solve_seconds is fresh provenance) to the identical decision
+    assert s2.deployment_plan.content_hash == s1.deployment_plan.content_hash
+    assert not entry.exists() or json.loads(entry.read_text())
+
+
+def test_plan_cache_drifted_entry_counts_as_miss(tmp_path):
+    """An entry that parses but fails the resolve check (fingerprint drift)
+    must be evicted and counted as a miss, not a hit — the hit counter is
+    what the CLI (and the CI cache gate) reports."""
+    cache_dir = tmp_path / "plans"
+    session("bert-large", platform="aws", global_batch=64,
+            plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    entry = next(cache_dir.glob("plan-*.json"))
+    blob = json.loads(entry.read_text())
+    blob["profile_fingerprint"] = "f" * 16
+    entry.write_text(json.dumps(blob))
+    s2 = session("bert-large", platform="aws", global_batch=64,
+                 plan_cache=cache_dir).plan(alpha=ALPHA, **FAST)
+    assert s2.plan_cache.hits == 0 and s2.plan_cache.misses == 1
+    assert s2.deployment_plan is not None    # re-solved
+    # the drifted entry was evicted and replaced by the fresh solve
+    fresh = json.loads(next(cache_dir.glob("plan-*.json")).read_text())
+    assert fresh["profile_fingerprint"] != "f" * 16
+
+
+def test_plan_cache_sweep_near_instant_on_rerun(tmp_path):
+    cache_dir = tmp_path / "plans"
+    s1 = session("bert-large", platform="aws", global_batch=32,
+                 plan_cache=cache_dir).sweep(**FAST)
+    n_solved = s1.plan_cache.misses
+    assert n_solved >= 1
+    s2 = session("bert-large", platform="aws", global_batch=32,
+                 plan_cache=cache_dir).sweep(**FAST)
+    assert s2.plan_cache.misses == 0 and s2.plan_cache.hits >= n_solved
+    assert [p.content_hash for p in s2.plans] == \
+        [p.content_hash for p in s1.plans]
+    assert s2.recommended == s1.recommended
+
+
+def test_cli_no_plan_cache_flag(tmp_path, capsys, monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", str(tmp_path / "cli-cache"))
+    out1 = _run_cli(capsys, "plan", "--model", "bert-large", "--batch", "64",
+                    "--fast")
+    assert "[plan cache hit]" not in out1
+    out2 = _run_cli(capsys, "plan", "--model", "bert-large", "--batch", "64",
+                    "--fast")
+    assert "[plan cache hit]" in out2
+    out3 = _run_cli(capsys, "plan", "--model", "bert-large", "--batch", "64",
+                    "--fast", "--no-plan-cache")
+    assert "[plan cache hit]" not in out3
+
+
 def test_session_rejects_unknown(tmp_path):
     with pytest.raises(KeyError):
         session("bert-large", platform="nope")
@@ -365,4 +457,4 @@ def test_launch_emulate_shim(capsys):
     rc = emulate.main(["--model", "bert-large", "--batch", "16", "--fast",
                        "--steps", "1"])
     assert rc == 0
-    assert "engine:" in capsys.readouterr().out
+    assert "engine[emulated]:" in capsys.readouterr().out
