@@ -47,6 +47,9 @@ def _headline(name: str, rows: list) -> str:
                 f"dp_never_worse={dp_ok}")
     if name == "collectives":
         return f"bidi_link_reduction={rows[0]['link_reduction']}"
+    if name == "trace_overhead":
+        gate = [x for x in rows if x["bench"] == "gate"]
+        return f"gate_ok={gate[0]['ok']}" if gate else "n/a"
     return f"rows={len(rows)}"
 
 
@@ -54,7 +57,7 @@ def _headline(name: str, rows: list) -> str:
 BENCH_NAMES = (
     "scatter_reduce", "overall_perf", "scaling", "coopt", "planner",
     "bandwidth_scaling", "alibaba", "perfmodel_accuracy", "runtime_accuracy",
-    "roofline", "collectives",
+    "roofline", "collectives", "trace_overhead",
 )
 
 
@@ -84,6 +87,7 @@ def main(argv=None) -> None:
         runtime_accuracy,
         scaling,
         scatter_reduce_bench,
+        trace_overhead,
     )
 
     benches = [
@@ -98,6 +102,7 @@ def main(argv=None) -> None:
         ("runtime_accuracy", runtime_accuracy),       # engine vs sim vs model
         ("roofline", roofline_bench),                 # deliverable (g)
         ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
+        ("trace_overhead", trace_overhead),           # span-recording gate
     ]
     # BENCH_NAMES exists so --list stays import-light; keep it honest
     assert tuple(n for n, _ in benches) == BENCH_NAMES, \

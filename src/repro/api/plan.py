@@ -270,23 +270,28 @@ class DeploymentPlan:
                         rp.total_micro_batches,
                         pipelined_sync=rp.pipelined_sync)
 
-    def simulate(self, *, contention: bool = False, **resolve_kw):
-        """Replay through the analytic discrete-event simulator."""
+    def simulate(self, *, contention: bool = False, trace: bool = False,
+                 **resolve_kw):
+        """Replay through the analytic discrete-event simulator.
+        ``trace=True`` materializes the DP's predicted spans as
+        ``SimResult.trace`` (``repro.obs.Trace``)."""
         from repro.serverless.simulator import simulate_funcpipe
 
         rp = self.resolve(**resolve_kw)
         return simulate_funcpipe(rp.profile, rp.platform, rp.config,
                                  rp.total_micro_batches,
                                  pipelined_sync=rp.pipelined_sync,
-                                 contention=contention)
+                                 contention=contention, trace=trace)
 
     def emulate(self, *, steps: int = 1, contention: bool = False,
-                execution=None, backend="emulated", **resolve_kw):
+                execution=None, backend="emulated", trace: bool = False,
+                **resolve_kw):
         """Execute through the storage-backed engine on an execution
         backend: ``"emulated"`` (virtual-clock cost model), ``"local"``
         (real concurrent workers, wall-clock), or any registered
         :class:`repro.serverless.backends.ExecutionBackend`.  The same saved
-        plan JSON drives every backend unmodified."""
+        plan JSON drives every backend unmodified.  ``trace=True`` records
+        per-worker spans on the backend's clock (``EngineResult.trace``)."""
         from repro.serverless.runtime import run_plan
 
         rp = self.resolve(**resolve_kw)
@@ -294,7 +299,7 @@ class DeploymentPlan:
                         rp.total_micro_batches, steps=steps,
                         pipelined_sync=rp.pipelined_sync,
                         contention=contention, execution=execution,
-                        backend=backend)
+                        backend=backend, trace=trace)
 
     # ------------------------------------------------------------ describing
     def describe(self) -> str:

@@ -48,6 +48,7 @@ class PlanCache:
         self.root = Path(root) if root is not None else default_cache_dir()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0   # corrupt/stale entries unlinked during get()
 
     # ------------------------------------------------------------------ keys
     @staticmethod
@@ -96,6 +97,7 @@ class PlanCache:
                 path.unlink()
             except OSError:
                 pass
+            self.evictions += 1
             self.misses += 1
             return None
         self.hits += 1

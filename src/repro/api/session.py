@@ -210,21 +210,24 @@ class Session:
             profile=self._merged_profile(), platform=self.platform)
         return self
 
-    def simulate(self) -> "Session":
-        """Replay the plan through the analytic discrete-event simulator."""
+    def simulate(self, *, trace: bool = False) -> "Session":
+        """Replay the plan through the analytic discrete-event simulator.
+        ``trace=True`` attaches the predicted spans (``sim_result.trace``)."""
         self.sim_result = self._require_plan().simulate(
-            contention=self.contention, profile=self._merged_profile(),
+            contention=self.contention, trace=trace,
+            profile=self._merged_profile(),
             platform=self.platform)
         return self
 
     def emulate(self, *, steps: int = 1, execution=None,
-                backend="emulated") -> "Session":
+                backend="emulated", trace: bool = False) -> "Session":
         """Execute the plan through the storage-backed runtime engine on the
         chosen execution backend (``"emulated"``, ``"local"``, or an
-        :class:`~repro.serverless.backends.ExecutionBackend` instance)."""
+        :class:`~repro.serverless.backends.ExecutionBackend` instance).
+        ``trace=True`` records per-worker spans (``engine_result.trace``)."""
         self.engine_result = self._require_plan().emulate(
             steps=steps, contention=self.contention, execution=execution,
-            backend=backend,
+            backend=backend, trace=trace,
             profile=self._merged_profile(), platform=self.platform)
         return self
 

@@ -3,6 +3,8 @@
     plan      profile a model + co-optimize -> print/save a DeploymentPlan
     simulate  replay a plan through the analytic discrete-event simulator
     emulate   execute a plan through the storage-backed runtime engine
+    inspect   validate a trace (emulate/simulate --trace); pipeline-health
+              metrics + predicted-vs-observed gap attribution
     sweep     the paper's workflow ①-⑤: Pareto frontier + recommendation +
               the §5.6 baseline algorithms (old examples/plan_serverless.py)
     bench     run the paper-table benchmark modules (benchmarks/run.py)
@@ -184,6 +186,9 @@ def _cmd_plan(args) -> int:
     print(f"solve: {plan.solve_seconds:.2f}s{cached} "
           f"(alpha={plan.alpha[0]:g},{plan.alpha[1]:.3e}; "
           f"objective={plan.objective:.6f})")
+    r = s.plan_result
+    if r is not None and r.stats is not None:
+        print(f"planner: {r.stats.describe()}")
     if args.out:
         plan.save(args.out)
         print(f"wrote {args.out} (content hash {plan.content_hash})")
@@ -201,7 +206,12 @@ def _cmd_simulate(args) -> int:
     sim = simulate_funcpipe(rp.profile, rp.platform, rp.config,
                             rp.total_micro_batches,
                             pipelined_sync=rp.pipelined_sync,
-                            contention=args.contention)
+                            contention=args.contention,
+                            trace=bool(args.trace))
+    if args.trace:
+        sim.trace.save(args.trace)
+        print(f"wrote trace {args.trace} "
+              f"({len(sim.trace.spans)} predicted spans)")
     bd = sim.breakdown
     print(f"simulate: t_iter={sim.t_iter:.3f}s cost=${sim.cost:.6f}/iter "
           f"mem={sim.total_mem_gb:.1f}GB "
@@ -336,7 +346,7 @@ def _cmd_emulate(args) -> int:
                    rp.total_micro_batches, steps=args.steps,
                    pipelined_sync=rp.pipelined_sync,
                    contention=args.contention, execution=ex,
-                   backend=backend)
+                   backend=backend, trace=bool(args.trace))
     for k, m in enumerate(res.metrics):
         print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
               f"aux={m['aux']:.4f}")
@@ -350,6 +360,22 @@ def _cmd_emulate(args) -> int:
     print(f"store: {ss.puts} puts / {ss.gets} gets / {ss.deletes} deletes, "
           f"{ss.bytes_in / MB:.0f}MB in / {ss.bytes_out / MB:.0f}MB out, "
           f"peak {ss.peak_bytes / MB:.0f}MB (drained, bytes conserved)")
+    if ss.class_bytes_in:
+        per_cls = " ".join(f"{c}={ss.class_bytes_in[c] / MB:.0f}MB"
+                           for c in sorted(ss.class_bytes_in))
+        print(f"store uploads by key class: {per_cls}")
+
+    if args.trace:
+        # attach the simulator's predicted timeline so `repro inspect` can
+        # run the gap attribution straight off the file
+        sim_t = simulate_funcpipe(rp.profile, rp.platform, rp.config,
+                                  rp.total_micro_batches,
+                                  pipelined_sync=rp.pipelined_sync,
+                                  contention=args.contention, trace=True)
+        res.trace.predicted = sim_t.trace.spans
+        res.trace.save(args.trace)
+        print(f"wrote trace {args.trace} ({len(res.trace.spans)} spans + "
+              f"{len(sim_t.trace.spans)} predicted)")
 
     if res.wall_clock:
         # host seconds are not the cost model's seconds: the analytic
@@ -431,7 +457,8 @@ def _cmd_sweep(args) -> int:
           f"t={rec.evaluation.t_iter:.2f}s, ${rec.evaluation.c_iter:.5f}/iter")
     if s.plan_cache is not None and (s.plan_cache.hits or s.plan_cache.misses):
         print(f"plan cache: {s.plan_cache.hits} hits / "
-              f"{s.plan_cache.misses} misses ({s.plan_cache.root})")
+              f"{s.plan_cache.misses} misses / "
+              f"{s.plan_cache.evictions} evicted ({s.plan_cache.root})")
     if args.save_dir:
         os.makedirs(args.save_dir, exist_ok=True)
         for plan in saved:
@@ -452,6 +479,89 @@ def _cmd_sweep(args) -> int:
         r = s.plan_result
         print(f"  {name}: t={r.evaluation.t_iter:.2f}s "
               f"${r.evaluation.c_iter:.5f} obj={r.objective:.5f}")
+    return 0
+
+
+# ---------------------------------------------------------------- inspect
+def _cmd_inspect(args) -> int:
+    """Validate a saved trace and print pipeline health + gap attribution."""
+    from repro.obs import (
+        ELAPSED,
+        Trace,
+        TraceValidationError,
+        gap_attribution,
+        pipeline_health,
+        validate_trace,
+    )
+
+    try:
+        tr = Trace.load(args.trace_file)
+    except FileNotFoundError:
+        raise SystemExit(f"error: no such trace file: {args.trace_file}")
+    except (ValueError, KeyError) as e:
+        raise SystemExit(f"error: not a repro trace: {e}")
+    try:
+        validate_trace(tr)
+    except TraceValidationError as e:
+        raise SystemExit(f"trace INVALID: {e}")
+    meta = tr.meta
+    print(f"trace OK: {len(tr.spans)} spans  model={meta.get('model', '?')} "
+          f"backend={meta.get('backend', '?')} "
+          f"clock={meta.get('clock', '?')} "
+          f"S={meta.get('S', '?')} d={meta.get('d', '?')} "
+          f"mu={meta.get('mu', '?')} steps={meta.get('steps', '?')} "
+          f"t_total={float(meta.get('t_total', 0.0)):.3f}s")
+
+    h = pipeline_health(tr)
+    have_bw = any("up_bw_util" in row for row in h["stages"])
+    hdr = "stage  compute  bubble    up-busy  dn-busy"
+    if have_bw:
+        hdr += "  up-util  dn-util"
+    print(hdr)
+    for row in h["stages"]:
+        line = (f"{row['stage']:>5d}  {row['compute_frac']:>7.1%} "
+                f"{row['bubble_frac']:>7.1%}  {row['up_frac']:>7.1%} "
+                f"{row['dn_frac']:>8.1%}")
+        if "up_bw_util" in row:
+            line += f"  {row['up_bw_util']:>7.1%}  {row['dn_bw_util']:>7.1%}"
+        print(line)
+    print(f"straggler ratio: {h['straggler_ratio']:.3f}")
+    for phase in ("fwd", "bwd", "sync"):
+        pb = h["phase_bytes"].get(phase)
+        if pb:
+            print(f"bytes[{phase}]: {pb['up'] / MB:.0f}MB up / "
+                  f"{pb['dn'] / MB:.0f}MB down")
+    rec = h.get("reconciliation")
+    if rec is not None:
+        verdict = "OK" if rec["ok"] else "MISMATCH"
+        print(f"byte reconciliation vs StoreStats: {verdict} "
+              f"(spans {rec['span_bytes_up'] / MB:.0f}MB up vs store "
+              f"{rec['store_bytes_in'] / MB:.0f}MB in; "
+              f"spans {rec['span_bytes_dn'] / MB:.0f}MB down vs store "
+              f"{rec['store_bytes_out'] / MB:.0f}MB out)")
+    store = meta.get("store") or {}
+    cls_in = store.get("class_bytes_in") or {}
+    if cls_in:
+        per_cls = " ".join(f"{c}={cls_in[c] / MB:.0f}MB"
+                           for c in sorted(cls_in))
+        print(f"store uploads by key class: {per_cls}")
+
+    if not tr.predicted:
+        print("no predicted timeline in this trace — produce one with "
+              "`repro emulate --trace` (gap attribution skipped)")
+        return 0
+    if meta.get("clock") == "wall":
+        print("note: observed spans are host wall-clock, predicted spans "
+              "are modeled seconds — gaps below compare across clocks")
+    rows = gap_attribution(tr)
+    print(f"\ngap attribution (top {args.top} of {len(rows)} cells, "
+          "per replica-step seconds):")
+    print("stage  phase  op          observed  predicted       gap")
+    for r in rows[:args.top]:
+        op = "elapsed" if r.op == ELAPSED else r.op
+        print(f"{r.stage:>5d}  {r.phase:<5s}  {op:<10s} "
+              f"{r.observed_s:>9.4f}  {r.predicted_s:>9.4f} "
+              f"{r.gap_s:>+9.4f}")
     return 0
 
 
@@ -506,6 +616,9 @@ def main(argv: Optional[List[str]] = None) -> int:
     _add_model_args(p)
     _add_solver_args(p)
     _add_cache_args(p)
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="write the simulator's predicted span timeline as a "
+                        "Chrome/Perfetto trace (see `repro inspect`)")
     p.set_defaults(func=_cmd_simulate)
 
     p = sub.add_parser("emulate",
@@ -532,7 +645,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--dp", type=int, default=2, help="numeric mode DP degree")
     p.add_argument("--n-layers", type=int, default=4,
                    help="numeric mode depth")
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="record per-worker spans and write a Chrome/Perfetto "
+                        "trace with the simulator's predicted timeline "
+                        "attached (see `repro inspect`)")
     p.set_defaults(func=_cmd_emulate)
+
+    p = sub.add_parser("inspect",
+                       help="validate a saved trace; print pipeline health "
+                            "metrics + predicted-vs-observed gap attribution")
+    p.add_argument("trace_file", help="trace JSON from emulate/simulate --trace")
+    p.add_argument("--top", type=int, default=10,
+                   help="attribution rows to print (default 10)")
+    p.set_defaults(func=_cmd_inspect)
 
     p = sub.add_parser("sweep", help="Pareto frontier + recommendation + "
                                      "baseline algorithms (paper §5)")

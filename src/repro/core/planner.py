@@ -79,6 +79,36 @@ _CHUNK_ROWS = 1 << 17          # max evaluate_batch rows per call
 _CD_SWEEPS = 6
 
 
+@dataclass
+class PlannerStats:
+    """Instrumentation counters from one solve: how much of the search space
+    each engine actually expanded vs pruned.  Purely observational — no
+    engine changes behavior based on them (``repro plan`` prints them; sweeps
+    aggregate them next to the plan-cache hit/miss counters)."""
+
+    engine: str = ""
+    # batch/scalar engines: feasible partitions polished through coordinate
+    # descent vs discarded by the lower-bound screen before any CD work
+    partitions_polished: int = 0
+    partitions_pruned: int = 0
+    # dp engine: (p, j) suffix states expanded; Pareto rows kept vs discarded
+    # by componentwise dominance vs discarded by the admissible completion
+    # bound against the incumbent
+    dp_states: int = 0
+    dp_rows_kept: int = 0
+    dp_rows_dominated: int = 0
+    dp_rows_bounded: int = 0
+
+    def describe(self) -> str:
+        if self.engine == "dp":
+            return (f"dp: {self.dp_states} states, "
+                    f"{self.dp_rows_kept} rows kept, "
+                    f"{self.dp_rows_dominated} dominated, "
+                    f"{self.dp_rows_bounded} bounded")
+        return (f"{self.engine}: {self.partitions_polished} partitions "
+                f"polished, {self.partitions_pruned} pruned")
+
+
 @dataclass(frozen=True)
 class PlanResult:
     config: Config
@@ -86,6 +116,7 @@ class PlanResult:
     objective: float
     solve_seconds: float
     profile: ModelProfile  # (merged) profile the config indexes into
+    stats: Optional[PlannerStats] = None   # search-space counters (optional)
 
 
 def _merged(profile: ModelProfile, merge_to: Optional[int]) -> ModelProfile:
@@ -246,6 +277,7 @@ def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
     L = prof.L
     J = len(platform.memory_options)
     best: Optional[PlanResult] = None
+    stats = PlannerStats(engine="scalar")
     for d in d_options:
         if total_micro_batches % d or total_micro_batches < d:
             continue
@@ -254,6 +286,7 @@ def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
             init = _min_feasible_stage_mem(prof, platform, x, d, mu)
             if init is None:
                 continue
+            stats.partitions_polished += 1
             if method == "exhaustive":
                 n_stages = sum(x) + 1
                 best_cfg, best_ev, best_o = None, None, np.inf
@@ -276,7 +309,8 @@ def _solve_scalar(profile, platform, *, alpha, total_micro_batches, d_options,
             if best is None or obj < best.objective:
                 best = PlanResult(cfg, ev, obj, 0.0, prof)
     if best is not None:
-        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0,
+                                   stats=stats)
     return best
 
 
@@ -510,6 +544,7 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
     J = tables.J
     best_key = None                  # (objective, d_rank, partition enum idx)
     best_state = None                # (x row, z row, d)
+    stats = PlannerStats(engine="batch")
     X_all = _partition_matrix(L, max_stages)         # d-independent
     sid_all, ns_all, hp_all, S_max = _stage_layout(X_all)
 
@@ -555,6 +590,7 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
                 key = (best_o, d_rank, int(idx[p]))
                 if best_key is None or key < best_key:
                     best_key, best_state = key, (X_f[p], best_z, d)
+            stats.partitions_polished += len(idx)
             continue
 
         # ---- coordinate descent over all partitions, LB-pruned and chunked
@@ -571,6 +607,7 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
         # the incumbent cheaply, so the bulk of the space is LB-pruned
         max_chunk = max(64, _CHUNK_ROWS // ((2 + J) * J))
         chunk, pos = 64, 0
+        polished_d = 0
         while pos < len(order):
             sel = order[pos:pos + chunk]
             pos += chunk
@@ -581,6 +618,7 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
             sel = sel[lb[sel] <= inc]
             if len(sel) == 0:
                 continue
+            polished_d += len(sel)
             tp, rank = np.nonzero(valid[sel])
             sm = cand_sm[sel][tp, rank].copy()
             lockstep = (_cd_lockstep_steepest if method == "cd-steepest"
@@ -598,6 +636,8 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
                     z = np.take_along_axis(win_sm[q][None, :],
                                            sid_f[sel[p_loc]][None, :], axis=1)[0]
                     best_key, best_state = key, (X_f[sel[p_loc]], z, d)
+        stats.partitions_polished += polished_d
+        stats.partitions_pruned += len(idx) - polished_d
 
     if best_state is None:
         return None
@@ -605,7 +645,8 @@ def _solve_batch(profile, platform, *, alpha, total_micro_batches, d_options,
     cfg = Config(x=tuple(int(v) for v in x_row), d=int(d),
                  z=tuple(int(v) for v in z_row))
     ev = evaluate(prof, platform, cfg, M, pipelined_sync=pipelined_sync)
-    return PlanResult(cfg, ev, ev.objective(a1, a2), time.time() - t0, prof)
+    return PlanResult(cfg, ev, ev.objective(a1, a2), time.time() - t0, prof,
+                      stats)
 
 
 # ----------------------------------------------------------------- dp engine
@@ -718,7 +759,8 @@ def _nondominated(V: np.ndarray) -> np.ndarray:
 def _dp_candidates(tables: PerfTables, segs: SegmentTables, d: int, mu: int,
                    a1: float, a2: float, pipelined_sync: bool,
                    max_stages: Optional[int], j_only: Optional[int] = None,
-                   incumbent: float = np.inf):
+                   incumbent: float = np.inf,
+                   stats: Optional[PlannerStats] = None):
     """Exact DP over stage cut-points for one data-parallel degree.
 
     Suffix plans are built right to left.  A state is ``(p, j)`` — the suffix
@@ -813,11 +855,17 @@ def _dp_candidates(tables: PerfTables, segs: SegmentTables, d: int, mu: int,
                 obj_lb = (a2 + b_cost * (V[:, 0] + t.minmem[p])) * t_lb
                 ok = obj_lb <= guard
                 if not ok.all():
+                    if stats is not None:
+                        stats.dp_rows_bounded += int(len(ok) - ok.sum())
                     V, cnt, bp = V[ok], cnt[ok], bp[ok]
                 if len(V) == 0:
                     continue
             key = np.column_stack([V, cnt]) if use_count else V
             idx = _nondominated(key)
+            if stats is not None:
+                stats.dp_states += 1
+                stats.dp_rows_dominated += len(key) - len(idx)
+                stats.dp_rows_kept += len(idx)
             V, cnt, bp = V[idx], cnt[idx], bp[idx]
             states[(p, j)] = (V, cnt, bp)
             if p > 0:
@@ -948,6 +996,7 @@ def dp_solve(
     tables = perf_tables(prof, platform)
     segs = segment_tables(prof, platform)
     best, best_key = None, None
+    stats = PlannerStats(engine="dp")
     for d_rank, d in enumerate(d_options):
         if M % d or M < d:
             continue
@@ -956,7 +1005,7 @@ def dp_solve(
                                   pipelined_sync)
         finalists, _ = _dp_candidates(tables, segs, d, mu, a1, a2,
                                       pipelined_sync, max_stages,
-                                      incumbent=seed)
+                                      incumbent=seed, stats=stats)
         for x, z in finalists:
             cfg = Config(x=x, d=d, z=z)
             ev = evaluate(prof, platform, cfg, M, pipelined_sync=pipelined_sync)
@@ -967,7 +1016,8 @@ def dp_solve(
                 best_key = key
                 best = PlanResult(cfg, ev, key[0], 0.0, prof)
     if best is not None:
-        best = dataclasses.replace(best, solve_seconds=time.time() - t0)
+        best = dataclasses.replace(best, solve_seconds=time.time() - t0,
+                                   stats=stats)
     return best
 
 

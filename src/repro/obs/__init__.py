@@ -1,0 +1,29 @@
+"""Span-level tracing + metrics for the execution stack (observability).
+
+One schema, three timelines: the emulated backend's virtual-clock spans, the
+local backend's wall-clock spans, and ``simulate_funcpipe``'s *predicted*
+spans — exported as a Perfetto-loadable Chrome trace, summarized into
+pipeline-health metrics, and differenced into a predicted-vs-observed gap
+attribution.  Front doors: ``run_plan(..., trace=True)`` /
+``Session.emulate(trace=True)`` / ``repro emulate --trace out.json`` /
+``repro inspect out.json``.
+"""
+from repro.obs.attribution import ELAPSED, GapRow, gap_attribution
+from repro.obs.metrics import pipeline_health
+from repro.obs.schema import (
+    OPS,
+    PHASES,
+    RESOURCE_OF,
+    Span,
+    SpanRecorder,
+    Trace,
+    TraceValidationError,
+    WorkerTracer,
+    validate_trace,
+)
+
+__all__ = [
+    "ELAPSED", "GapRow", "gap_attribution", "pipeline_health",
+    "OPS", "PHASES", "RESOURCE_OF", "Span", "SpanRecorder", "Trace",
+    "TraceValidationError", "WorkerTracer", "validate_trace",
+]

@@ -107,6 +107,16 @@ class ExecutionBackend(ABC):
     #: True when timings are host wall-clock (local/real platforms); False
     #: when the backend charges the paper's cost model on a virtual clock
     wall_clock: bool = False
+    #: optional ``repro.obs.SpanRecorder`` installed before ``open()``;
+    #: tracing-capable backends emit one Span per resource task into it
+    recorder = None
+
+    def attach_recorder(self, recorder) -> None:
+        """Install a span recorder (``repro.obs.SpanRecorder``) for the next
+        ``open()``/run: the emulated backend emits virtual-clock spans, the
+        local backend wall-clock spans.  Backends that do not trace simply
+        leave the recorder empty — attaching is never an error."""
+        self.recorder = recorder
 
     @abstractmethod
     def open(self, agg) -> None:

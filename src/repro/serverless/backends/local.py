@@ -106,8 +106,7 @@ class LocalStore:
                 # overwrite frees the old object: count the implicit delete
                 # (and its spill file) so drain accounting stays conserved
                 self._live_bytes -= prev.nbytes
-                self.stats.deletes += 1
-                self.stats.bytes_deleted += prev.nbytes
+                self.stats.count_delete(key, prev.nbytes)
                 if prev.path is not None:
                     try:
                         os.remove(prev.path)
@@ -117,10 +116,7 @@ class LocalStore:
                           value=None if path is not None else value, path=path)
             self._objects[key] = obj
             self._live_bytes += obj.nbytes
-            self.stats.puts += 1
-            self.stats.bytes_in += obj.nbytes
-            self.stats.peak_bytes = max(self.stats.peak_bytes,
-                                        self._live_bytes)
+            self.stats.count_put(key, obj.nbytes, self._live_bytes)
             self._cv.notify_all()
 
     def _wait_for(self, key: str) -> _Stored:
@@ -132,23 +128,24 @@ class LocalStore:
                 f"{self.timeout:.0f}s — a producer worker likely died")
         return self._objects[key]
 
-    def get(self, key: str) -> Any:
-        """Block until ``key`` is visible, then return its payload."""
+    def get(self, key: str, return_nbytes: bool = False) -> Any:
+        """Block until ``key`` is visible, then return its payload (or a
+        ``(payload, modeled_nbytes)`` pair with ``return_nbytes=True`` —
+        tracing needs the object size alongside the value)."""
         with self._cv:
             obj = self._wait_for(key)
-            self.stats.gets += 1
-            self.stats.bytes_out += obj.nbytes
-        return self._load(obj)
+            self.stats.count_get(key, obj.nbytes)
+        value = self._load(obj)
+        return (value, obj.nbytes) if return_nbytes else value
 
-    def take(self, key: str) -> Any:
+    def take(self, key: str, return_nbytes: bool = False) -> Any:
         """Blocking fetch-and-consume (get + delete, atomically)."""
         with self._cv:
             obj = self._wait_for(key)
-            self.stats.gets += 1
-            self.stats.bytes_out += obj.nbytes
+            self.stats.count_get(key, obj.nbytes)
             value = self._load(obj)   # before delete unlinks any spill file
             self._delete_locked(key)
-        return value
+        return (value, obj.nbytes) if return_nbytes else value
 
     def delete(self, key: str) -> None:
         with self._cv:
@@ -158,8 +155,7 @@ class LocalStore:
         obj = self._objects.pop(key, None)
         if obj is not None:
             self._live_bytes -= obj.nbytes
-            self.stats.deletes += 1
-            self.stats.bytes_deleted += obj.nbytes
+            self.stats.count_delete(key, obj.nbytes)
             if obj.path is not None:
                 try:
                     os.remove(obj.path)
@@ -184,25 +180,51 @@ class LocalStore:
 
 
 class LocalWorkerContext(WorkerContext):
-    """A stage worker on a real thread: blocking store, no modeled clock."""
+    """A stage worker on a real thread: blocking store, no modeled clock.
 
-    def __init__(self, store: LocalStore):
+    With ``tracer``/``clock`` set (``repro.obs.WorkerTracer`` + seconds since
+    run start), every store op and compute emits one *wall-clock* span; a
+    blocking download's visibility wait is part of its span, which is exactly
+    the stall the timeline should show.
+    """
+
+    def __init__(self, store: LocalStore, tracer=None, clock=None):
         self.store = store
+        self.tracer = tracer
+        self.clock = clock
 
     def download(self, key: str):
-        return self.store.take(key), None
+        if self.tracer is None:
+            return self.store.take(key), None
+        t0 = self.clock()
+        value, nb = self.store.take(key, return_nbytes=True)
+        self.tracer.emit("download", t0, self.clock(), nbytes=nb, key=key)
+        return value, None
 
     def compute(self, cost_s: float, fn: Optional[Callable[[], Any]] = None,
                 after: Any = None) -> Any:
         # modeled cost is the virtual clock's business; here compute is real
-        return fn() if fn is not None else None
+        if self.tracer is None:
+            return fn() if fn is not None else None
+        t0 = self.clock()
+        out = fn() if fn is not None else None
+        self.tracer.emit("compute", t0, self.clock())
+        return out
 
     def upload(self, key: str, nbytes: float, value: Any = None) -> Any:
+        if self.tracer is None:
+            self.store.put(key, nbytes, value=value)
+            return None
+        t0 = self.clock()
         self.store.put(key, nbytes, value=value)
+        self.tracer.emit("upload", t0, self.clock(), nbytes=nbytes, key=key)
         return None
 
     def phase_barrier(self) -> None:
-        # a serial worker's forward uploads complete before it proceeds
+        # a serial worker's forward uploads complete before it proceeds;
+        # for tracing this is also the worker's fwd -> bwd phase flip
+        if self.tracer is not None:
+            self.tracer.phase = "bwd"
         return None
 
 
@@ -219,6 +241,11 @@ class LocalBackend(ExecutionBackend):
         self.agg = None
         self.store: Optional[LocalStore] = None
         self._t0 = 0.0
+        # per-(stage, replica) WorkerTracers when a recorder is attached;
+        # contexts for step k are handed out after run_step(k-1) returned,
+        # so _steps_done stamps each tracer's step at context creation
+        self._tracers: Dict[Tuple[int, int], Any] = {}
+        self._steps_done = 0
 
     # --------------------------------------------------------------- lifecycle
     def open(self, agg) -> None:
@@ -230,10 +257,22 @@ class LocalBackend(ExecutionBackend):
         self.agg = agg
         self.store = LocalStore(timeout=self.get_timeout,
                                 fs_root=self.fs_root)
+        self._tracers = {}
+        self._steps_done = 0
         self._t0 = time.perf_counter()
 
+    def _clock(self) -> float:
+        """Seconds since run start — the trace's wall-clock time base."""
+        return time.perf_counter() - self._t0
+
     def context(self, s: int, r: int) -> LocalWorkerContext:
-        return LocalWorkerContext(self.store)
+        if self.recorder is None:
+            return LocalWorkerContext(self.store)
+        tr = self.recorder.tracer(s, r)
+        tr.step = self._steps_done
+        tr.phase = "fwd"
+        self._tracers[(s, r)] = tr
+        return LocalWorkerContext(self.store, tracer=tr, clock=self._clock)
 
     @property
     def store_stats(self) -> StoreStats:
@@ -260,11 +299,15 @@ class LocalBackend(ExecutionBackend):
                 y = next(gen)
                 while True:
                     if isinstance(y, tuple) and y[0] == "sync":
+                        tr = self._tracers.get((s, r))
+                        if tr is not None:
+                            tr.phase = "sync"   # this worker's own tracer
                         t0 = time.perf_counter()
                         reduced = local_scatter_reduce(
                             self.store, r, d, agg.s_stage[s], y[1],
                             key_prefix=f"k{k}/sync{s}",
-                            pipelined=pipelined_sync, barrier=barriers.get(s))
+                            pipelined=pipelined_sync, barrier=barriers.get(s),
+                            tracer=tr, clock=self._clock)
                         sync_secs[(s, r)] = time.perf_counter() - t0
                         y = gen.send(reduced)
                     else:
@@ -293,4 +336,5 @@ class LocalBackend(ExecutionBackend):
         for s in range(S):
             stage = [sync_secs.get((s, r), 0.0) for r in range(d)]
             sync = max(sync, max(stage))
+        self._steps_done += 1
         return StepTiming(end=time.perf_counter() - self._t0, sync=sync)

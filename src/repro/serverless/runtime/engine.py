@@ -82,6 +82,7 @@ class EngineResult:
     metrics: List[Dict[str, float]] = field(default_factory=list)  # per step
     params: Optional[dict] = None          # final assembled params (numeric mode)
     store_stats: Optional[StoreStats] = None
+    trace: Optional[Any] = None            # repro.obs.Trace (trace=True runs)
 
     @property
     def losses(self) -> List[float]:
@@ -175,6 +176,7 @@ def run_plan(
     contention: bool = False,
     execution: Optional[Execution] = None,
     backend: Union[str, ExecutionBackend] = "emulated",
+    trace: bool = False,
 ) -> EngineResult:
     """Execute ``steps`` training iterations of the plan through a backend.
 
@@ -182,7 +184,10 @@ def run_plan(
     single :class:`repro.api.DeploymentPlan` as the first argument (see
     ``simulator.unpack_plan_args``).  ``backend`` is a registry name
     (``emulated``, ``local``, ...) or a pre-configured
-    :class:`ExecutionBackend` instance."""
+    :class:`ExecutionBackend` instance.  ``trace=True`` records one span per
+    worker resource task (download/compute/upload/barrier, plus per-chunk
+    scatter-reduce transfers) on the backend's clock and returns it as
+    ``EngineResult.trace`` (a :class:`repro.obs.Trace`)."""
     from repro.serverless.backends import get_backend
 
     profile, platform, config, total_micro_batches, pipelined_sync = \
@@ -192,6 +197,13 @@ def run_plan(
                            contention=contention)
     S, mu, d = agg.S, agg.mu, agg.d
     be = get_backend(backend)
+
+    recorder = None
+    if trace:
+        from repro.obs import SpanRecorder
+
+        recorder = SpanRecorder()
+        be.attach_recorder(recorder)
 
     workers = None
     if execution is not None:
@@ -245,6 +257,28 @@ def run_plan(
         from repro.serverless.runtime.worker import assemble_params
 
         params = assemble_params(execution.cfg, [workers[s][0] for s in range(S)])
+
+    trace_obj = None
+    if recorder is not None:
+        from repro.obs import Trace
+
+        trace_obj = Trace(
+            spans=recorder.spans,
+            meta={
+                "model": profile.name,
+                "backend": be.name,
+                "clock": "wall" if be.wall_clock else "virtual",
+                "S": S, "d": d, "mu": mu, "steps": steps,
+                "n_workers": agg.n_workers,
+                "t_total": float(t_total),
+                "t_iter": float(t_iter),
+                "step_ends": [float(t) for t in iter_ends],
+                "step_syncs": [float(t) for t in sync_durations],
+                "bandwidth": [float(w) for w in agg.w],
+                "pipelined_sync": bool(pipelined_sync),
+                "store": stats.as_dict(),
+            },
+        )
     return EngineResult(
         t_iter=float(t_iter),
         t_total=float(t_total),
@@ -262,4 +296,5 @@ def run_plan(
         metrics=metrics,
         params=params,
         store_stats=stats,
+        trace=trace_obj,
     )

@@ -141,6 +141,8 @@ def local_scatter_reduce(
     key_prefix: str,
     pipelined: bool = True,
     barrier=None,
+    tracer=None,
+    clock=None,
 ) -> Optional[np.ndarray]:
     """One worker's share of the storage scatter-reduce on a *wall-clock*
     store (``backends.local.LocalStore``): call from ``n`` concurrent worker
@@ -158,38 +160,71 @@ def local_scatter_reduce(
     blocking visibility alone.  Either way one final barrier fences the
     cleanup: a worker frees its reduced chunk only after every peer has
     pulled it, which is what keeps the store drained across steps.
+
+    With ``tracer``/``clock`` set (``repro.obs.WorkerTracer`` + a seconds
+    clock), every per-chunk put/take/get and barrier wait emits one
+    wall-clock span — the local mirror of the emulated collectives' per-chunk
+    channel spans.
     """
     i = index
     if n == 1:
         return None if value is None else np.asarray(value, dtype=np.float32)
+    trace_on = tracer is not None and clock is not None
+
+    def _traced_put(key, val):
+        if not trace_on:
+            store.put(key, chunk_b, value=val)
+            return
+        t0 = clock()
+        store.put(key, chunk_b, value=val)
+        tracer.emit("upload", t0, clock(), nbytes=chunk_b, key=key)
+
+    def _traced_fetch(fetch, key):
+        if not trace_on:
+            return fetch(key)
+        # the blocking visibility wait is inside fetch(); the span covers it,
+        # matching the emulated download span which starts at data-ready
+        t0 = clock()
+        val, nb = fetch(key, True)
+        tracer.emit("download", t0, clock(), nbytes=nb, key=key)
+        return val
+
+    def _traced_wait(b):
+        if not trace_on:
+            b.wait()
+            return
+        t0 = clock()
+        b.wait()
+        tracer.emit("barrier", t0, clock())
+
     chunk_b = nbytes / n
     chunks = None if value is None else np.array_split(np.asarray(value), n)
 
     # scatter: upload my partials of everyone else's chunk, staggered order
     for r in range(1, n):
         j = (i + r) % n
-        store.put(f"{key_prefix}/part/{j}/{i}", chunk_b,
-                  value=None if chunks is None else chunks[j])
+        _traced_put(f"{key_prefix}/part/{j}/{i}",
+                    None if chunks is None else chunks[j])
     if not pipelined and barrier is not None:
-        barrier.wait()                    # eq (1) phase-1 barrier
+        _traced_wait(barrier)             # eq (1) phase-1 barrier
 
     # reduce: pull the n-1 partials of the owned chunk (blocking as they
     # surface), reduce in ring order, publish the reduced chunk
-    parts = [store.take(f"{key_prefix}/part/{i}/{(i - r) % n}")
+    parts = [_traced_fetch(store.take, f"{key_prefix}/part/{i}/{(i - r) % n}")
              for r in range(1, n)]
     reduced_i = None if chunks is None else ring_reduce(chunks[i], parts)
-    store.put(f"{key_prefix}/red/{i}", chunk_b, value=reduced_i)
+    _traced_put(f"{key_prefix}/red/{i}", reduced_i)
     if not pipelined and barrier is not None:
-        barrier.wait()                    # eq (1) phase-2 barrier
+        _traced_wait(barrier)             # eq (1) phase-2 barrier
 
     # all-gather: pull the other reduced chunks
     out: List[Optional[np.ndarray]] = [None] * n
     out[i] = reduced_i
     for r in range(1, n):
         src = (i + r) % n
-        out[src] = store.get(f"{key_prefix}/red/{src}")
+        out[src] = _traced_fetch(store.get, f"{key_prefix}/red/{src}")
     if barrier is not None:
-        barrier.wait()                    # cleanup fence: all peers have read
+        _traced_wait(barrier)             # cleanup fence: all peers have read
     store.delete(f"{key_prefix}/red/{i}")
     return None if chunks is None else np.concatenate(out)
 

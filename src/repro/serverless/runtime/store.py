@@ -28,7 +28,7 @@ what AWS Lambda / Alibaba FC + S3 / OSS would have.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any, Dict
 
 # single source of truth for per-worker bandwidth (§5.4 + §5.7), re-exported
@@ -43,6 +43,21 @@ class StoredObject:
     value: Any = None
 
 
+def classify_key(key: str) -> str:
+    """Key class for the per-prefix byte breakdown: the engine's keys are
+    ``k{k}/r{r}/m{m}/act{s}`` (forward activations), ``.../grad{s}``
+    (backward boundary gradients) and ``k{k}/sync{s}/part|red/...``
+    (scatter-reduce chunks — parameter-gradient traffic)."""
+    if "/part/" in key or "/red/" in key:
+        return "sync"
+    base = key.rsplit("/", 1)[-1]
+    if base.startswith("act"):
+        return "act"
+    if base.startswith("grad"):
+        return "grad"
+    return "other"
+
+
 @dataclass
 class StoreStats:
     puts: int = 0
@@ -52,6 +67,47 @@ class StoreStats:
     bytes_out: float = 0.0
     bytes_deleted: float = 0.0
     peak_bytes: float = 0.0
+    # per key-class breakdown (classify_key: act | grad | sync | other) so
+    # byte-conservation failures can name the offending traffic class
+    class_bytes_in: Dict[str, float] = field(default_factory=dict)
+    class_bytes_out: Dict[str, float] = field(default_factory=dict)
+    class_bytes_deleted: Dict[str, float] = field(default_factory=dict)
+
+    # ------------------------------------------------- shared bookkeeping
+    # every store implementation (emulated ObjectStore, wall-clock
+    # LocalStore) funnels its counter updates through these three, so the
+    # per-class accounting can never drift between backends
+    def count_put(self, key: str, nbytes: float, live_bytes: float) -> None:
+        self.puts += 1
+        self.bytes_in += nbytes
+        self.peak_bytes = max(self.peak_bytes, live_bytes)
+        cls = classify_key(key)
+        self.class_bytes_in[cls] = self.class_bytes_in.get(cls, 0.0) + nbytes
+
+    def count_get(self, key: str, nbytes: float) -> None:
+        self.gets += 1
+        self.bytes_out += nbytes
+        cls = classify_key(key)
+        self.class_bytes_out[cls] = self.class_bytes_out.get(cls, 0.0) + nbytes
+
+    def count_delete(self, key: str, nbytes: float) -> None:
+        self.deletes += 1
+        self.bytes_deleted += nbytes
+        cls = classify_key(key)
+        self.class_bytes_deleted[cls] = \
+            self.class_bytes_deleted.get(cls, 0.0) + nbytes
+
+    def as_dict(self) -> dict:
+        """JSON-ready counters (trace metadata / ``repro inspect``)."""
+        return {
+            "puts": self.puts, "gets": self.gets, "deletes": self.deletes,
+            "bytes_in": self.bytes_in, "bytes_out": self.bytes_out,
+            "bytes_deleted": self.bytes_deleted,
+            "peak_bytes": self.peak_bytes,
+            "class_bytes_in": dict(self.class_bytes_in),
+            "class_bytes_out": dict(self.class_bytes_out),
+            "class_bytes_deleted": dict(self.class_bytes_deleted),
+        }
 
 
 class ObjectStore:
@@ -70,14 +126,11 @@ class ObjectStore:
             # an overwrite implicitly frees the old object; count it so the
             # puts==deletes / bytes conservation invariant stays meaningful
             self._live_bytes -= prev.nbytes
-            self.stats.deletes += 1
-            self.stats.bytes_deleted += prev.nbytes
+            self.stats.count_delete(key, prev.nbytes)
         obj = StoredObject(nbytes=float(nbytes), visible_at=visible_at, value=value)
         self._objects[key] = obj
         self._live_bytes += obj.nbytes
-        self.stats.puts += 1
-        self.stats.bytes_in += obj.nbytes
-        self.stats.peak_bytes = max(self.stats.peak_bytes, self._live_bytes)
+        self.stats.count_put(key, obj.nbytes, self._live_bytes)
         return obj
 
     def head(self, key: str) -> StoredObject:
@@ -87,16 +140,14 @@ class ObjectStore:
 
     def get(self, key: str) -> StoredObject:
         obj = self.head(key)
-        self.stats.gets += 1
-        self.stats.bytes_out += obj.nbytes
+        self.stats.count_get(key, obj.nbytes)
         return obj
 
     def delete(self, key: str) -> None:
         obj = self._objects.pop(key, None)
         if obj is not None:
             self._live_bytes -= obj.nbytes
-            self.stats.deletes += 1
-            self.stats.bytes_deleted += obj.nbytes
+            self.stats.count_delete(key, obj.nbytes)
 
     def keys(self):
         return list(self._objects)
@@ -137,9 +188,20 @@ def assert_store_drained(store) -> None:
             f"{st.deletes} deletes with an empty store")
     # different backends sum the same per-object sizes in different orders
     if abs(st.bytes_in - st.bytes_deleted) > 1e-6 * max(st.bytes_in, 1.0):
+        # name the offending key class (activations / gradients / sync
+        # chunks) so the leak points at a collective or a pipeline boundary
+        worst, worst_delta = "?", 0.0
+        for cls in set(st.class_bytes_in) | set(st.class_bytes_deleted):
+            delta = abs(st.class_bytes_in.get(cls, 0.0)
+                        - st.class_bytes_deleted.get(cls, 0.0))
+            if delta > worst_delta:
+                worst, worst_delta = cls, delta
         raise RuntimeError(
             f"store bytes not conserved: {st.bytes_in:.0f} uploaded vs "
-            f"{st.bytes_deleted:.0f} deleted with an empty store")
+            f"{st.bytes_deleted:.0f} deleted with an empty store "
+            f"(worst key class: {worst!r}, "
+            f"{st.class_bytes_in.get(worst, 0.0):.0f} in vs "
+            f"{st.class_bytes_deleted.get(worst, 0.0):.0f} deleted)")
 
 
 class StageChannel:
@@ -160,11 +222,16 @@ class StageChannel:
         self.cpu_free = 0.0
         self.up_free = 0.0
         self.dn_free = 0.0
+        # optional repro.obs.WorkerTracer: when set, every charged resource
+        # task (incl. each scatter-reduce chunk) emits one virtual-clock span
+        self.tracer = None
 
     # ------------------------------------------------------------- resources
     def compute(self, duration: float, ready: float = 0.0) -> float:
         start = max(ready, self.cpu_free)
         self.cpu_free = start + duration
+        if self.tracer is not None:
+            self.tracer.emit("compute", start, self.cpu_free)
         return self.cpu_free
 
     def upload(self, key: str, nbytes: float, ready: float = 0.0,
@@ -173,13 +240,20 @@ class StageChannel:
         end = start + nbytes / self.bandwidth + (self.latency if new_request else 0.0)
         self.up_free = end
         self.store.put(key, nbytes, value=value, visible_at=end)
+        if self.tracer is not None:
+            self.tracer.emit("upload", start, end, nbytes=nbytes, key=key)
         return end
 
     def download(self, key: str, ready: float = 0.0, new_request: bool = True):
         obj = self.store.get(key)
+        # span start is when the transfer begins — the visibility wait shows
+        # up as a gap (bubble), not as link occupancy
         start = max(ready, self.dn_free, obj.visible_at)
         end = start + obj.nbytes / self.bandwidth + (self.latency if new_request else 0.0)
         self.dn_free = end
+        if self.tracer is not None:
+            self.tracer.emit("download", start, end, nbytes=obj.nbytes,
+                             key=key)
         return obj.value, end
 
     # --------------------------------------------------------------- ordering
@@ -187,6 +261,9 @@ class StageChannel:
         """Program-order barrier between the forward and backward phases: a
         worker issues no backward download before its forward uploads are
         done (the ``fwd_u_end[s, mu-1]`` term of the simulator's DP)."""
+        if self.tracer is not None and self.up_free > self.dn_free:
+            # the fence's wait interval (downlink held back by the uplink)
+            self.tracer.emit("barrier", self.dn_free, self.up_free)
         self.dn_free = max(self.dn_free, self.up_free)
 
     def release_at(self, t: float) -> None:

@@ -41,6 +41,8 @@ class SimResult:
     n_workers: int
     total_mem_gb: float
     breakdown: Dict[str, float] = field(default_factory=dict)
+    # predicted repro.obs.Trace (simulate_funcpipe(..., trace=True) only)
+    trace: Optional[object] = None
 
     @property
     def throughput(self) -> float:  # samples/s given meta in breakdown
@@ -198,12 +200,16 @@ def simulate_funcpipe(
     *,
     pipelined_sync: Optional[bool] = None,
     contention: bool = False,
+    trace: bool = False,
 ) -> SimResult:
     """Simulate one FuncPipe iteration.
 
     Accepts either the explicit ``(profile, platform, config, M)`` tuple or
     a single :class:`repro.api.DeploymentPlan` as the first argument (see
-    :func:`unpack_plan_args`)."""
+    :func:`unpack_plan_args`).  ``trace=True`` additionally materializes the
+    DP's task intervals as *predicted* spans — one representative replica
+    (r=0) per stage, one step — in the same ``repro.obs`` schema the runtime
+    backends emit, returned as ``SimResult.trace`` for gap attribution."""
     profile, platform, config, total_micro_batches, pipelined_sync = \
         unpack_plan_args("simulate_funcpipe", profile, platform, config,
                          total_micro_batches, pipelined_sync)
@@ -254,11 +260,20 @@ def simulate_funcpipe(
     sync_fn = sync_time_pipelined if pipelined_sync else sync_time_nonpipelined
     end = 0.0
     sync_total = 0.0
+    sync_spans = []                                      # (s, done, ts)
     for s in range(S):
         done = bwd_c_end[s, 0] if S == 1 else max(bwd_c_end[s, 0], bwd_u_end[s, 0] if s > 0 else 0.0)
         ts = sync_fn(s_stage[s], w[s], d, t_lat) if d > 1 else 0.0
         sync_total = max(sync_total, ts)
         end = max(end, done + ts)
+        sync_spans.append((s, done, ts))
+
+    trace_obj = None
+    if trace:
+        trace_obj = _predicted_trace(
+            profile, agg, fwd_d_end, fwd_c_end, fwd_u_end,
+            bwd_d_end, bwd_c_end, bwd_u_end, sync_spans,
+            end=float(end), pipelined_sync=pipelined_sync)
 
     mem_total = d * float(agg.mem.sum())
     cost = platform.price_per_gb_s * (mem_total / GB) * end
@@ -272,6 +287,85 @@ def simulate_funcpipe(
             "compute": comp,
             "pipeline_comm": float(end - comp - sync_total) if S > 1 else 0.0,
             "sync": float(sync_total),
+        },
+        trace=trace_obj,
+    )
+
+
+def _predicted_trace(profile, agg: StageAggregates,
+                     fwd_d_end, fwd_c_end, fwd_u_end,
+                     bwd_d_end, bwd_c_end, bwd_u_end, sync_spans,
+                     *, end: float, pipelined_sync: bool):
+    """Materialize the longest-path DP's task intervals as predicted spans.
+
+    Every DP cell already *is* a task end-time on a serial resource, so the
+    span is just ``[end - duration, end]`` with the shared cost-model sizes
+    attached — same schema, keys and phase labels as the runtime backends
+    (step 0, replica 0: the DP models one representative replica; the sync
+    term is emitted as a single aggregate ``op="sync"`` span per stage, not
+    per chunk, because eq (1)/(2) are closed forms)."""
+    from repro.obs import Span, Trace
+
+    S, mu, d = agg.S, agg.mu, agg.d
+    spans = []
+    for m in range(mu):
+        for s in range(S):
+            if s > 0:
+                spans.append(Span(
+                    stage=s, replica=0, step=0, phase="fwd", op="download",
+                    start=float(fwd_d_end[s, m] - agg.t_dn_f[s]),
+                    end=float(fwd_d_end[s, m]),
+                    nbytes=float(agg.out_b[s - 1]),
+                    key=f"k0/r0/m{m}/act{s - 1}"))
+            spans.append(Span(
+                stage=s, replica=0, step=0, phase="fwd", op="compute",
+                start=float(fwd_c_end[s, m] - agg.t_fc[s]),
+                end=float(fwd_c_end[s, m])))
+            if s < S - 1:
+                spans.append(Span(
+                    stage=s, replica=0, step=0, phase="fwd", op="upload",
+                    start=float(fwd_u_end[s, m] - agg.t_up_f[s]),
+                    end=float(fwd_u_end[s, m]),
+                    nbytes=float(agg.out_b[s]),
+                    key=f"k0/r0/m{m}/act{s}"))
+    for m in range(mu - 1, -1, -1):
+        for s in range(S - 1, -1, -1):
+            if s < S - 1:
+                spans.append(Span(
+                    stage=s, replica=0, step=0, phase="bwd", op="download",
+                    start=float(bwd_d_end[s, m] - agg.t_dn_b[s]),
+                    end=float(bwd_d_end[s, m]),
+                    nbytes=float(agg.grad_b[s + 1]),
+                    key=f"k0/r0/m{m}/grad{s}"))
+            spans.append(Span(
+                stage=s, replica=0, step=0, phase="bwd", op="compute",
+                start=float(bwd_c_end[s, m] - agg.t_bc[s]),
+                end=float(bwd_c_end[s, m])))
+            if s > 0:
+                spans.append(Span(
+                    stage=s, replica=0, step=0, phase="bwd", op="upload",
+                    start=float(bwd_u_end[s, m] - agg.t_up_b[s]),
+                    end=float(bwd_u_end[s, m]),
+                    nbytes=float(agg.grad_b[s]),
+                    key=f"k0/r0/m{m}/grad{s - 1}"))
+    if d > 1:
+        for s, done, ts in sync_spans:
+            spans.append(Span(
+                stage=s, replica=0, step=0, phase="sync", op="sync",
+                start=float(done), end=float(done + ts),
+                nbytes=float(agg.s_stage[s])))
+    return Trace(
+        spans=spans,
+        meta={
+            "model": profile.name,
+            "backend": "predicted",
+            "clock": "virtual",
+            "S": S, "d": d, "mu": mu, "steps": 1,
+            "n_workers": agg.n_workers,
+            "t_total": end,
+            "t_iter": end,
+            "bandwidth": [float(x) for x in agg.w],
+            "pipelined_sync": bool(pipelined_sync),
         },
     )
 
