@@ -1,0 +1,123 @@
+"""Fault-tolerance-overhead gate: recovery machinery must be ~free when no
+faults fire.
+
+Times ``run_plan`` on the **local** execution backend (real daemon threads
+over the blocking in-process store — host wall-clock is the measurement) in
+three modes:
+
+* ``off``      — no tolerance: no retry wrappers, no heartbeats charged, no
+  checkpoints,
+* ``tolerant`` — full recovery machinery armed on a fault-free run: every
+  store op goes through :class:`~repro.serverless.faults.ResilientContext`,
+  workers heartbeat, and stage state checkpoints into the store each step,
+* ``chaos``    — a seeded :class:`FaultPlan` (transient + crash + lifetime
+  cap) actually firing, as a sanity row: recovery must terminate and is
+  allowed to cost real time.
+
+Each mode reports the **min over reps** of host seconds per step — min, not
+mean, because scheduler noise only ever adds time.  ``--check`` enforces the
+CI gate ``tolerant_min <= base_min * 1.05 + 0.05`` (5% relative + 50ms
+absolute slack for timer/thread-start jitter on tiny runs) and exits 1 on
+breach.  Writes ``BENCH_fault_overhead.json`` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.fault_overhead [--fast] [--check]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core.partition import merge_layers
+from repro.core.perfmodel import Config
+from repro.core.profiler import paper_model_profile
+from repro.serverless import faults as F
+from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.runtime import run_plan
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_REPO_ROOT, "BENCH_fault_overhead.json")
+
+# relative + absolute slack of the --check gate (also quoted in ci.yml)
+REL_SLACK = 1.05
+ABS_SLACK = 0.05
+
+
+def _plan(d):
+    prof = merge_layers(paper_model_profile("bert-large", AWS_LAMBDA), 6)
+    L = prof.L
+    x = tuple(1 if i == 2 else 0 for i in range(L - 1))
+    return prof, Config(x=x, d=d, z=tuple(5 for _ in range(L)))
+
+
+def _chaos_plan(steps):
+    return F.FaultPlan(events=(
+        F.FaultEvent(kind="transient", stage=0, replica=0, step=0,
+                     op="put", index=0),
+        F.FaultEvent(kind="crash", stage=1, replica=0,
+                     step=max(0, steps - 1), phase="fwd"),
+    ), lifetime_steps=max(2, steps))
+
+
+def _time_once(*, d, M, steps, faults=None, tolerance=None):
+    prof, cfg = _plan(d)
+    t0 = time.perf_counter()
+    res = run_plan(prof, AWS_LAMBDA, cfg, M, steps=steps, backend="local",
+                   faults=faults, tolerance=tolerance)
+    host = time.perf_counter() - t0
+    rep = res.fault_report
+    return host / steps, (0 if rep is None else rep.restarts
+                          + rep.planned_restarts)
+
+
+def rows(fast: bool = False):
+    reps = 3 if fast else 5
+    d, M, steps = 2, 8, (1 if fast else 2)
+    tol = F.FaultTolerance(retry=F.RetryPolicy(base_delay_s=0.01))
+    modes = (
+        ("local_off", dict()),
+        ("local_tolerant", dict(tolerance=tol)),
+        ("local_chaos", dict(faults=_chaos_plan(steps), tolerance=tol)),
+    )
+    out = []
+    for name, kw in modes:
+        best, restarts = min(
+            _time_once(d=d, M=M, steps=steps, **kw) for _ in range(reps))
+        out.append({"bench": name, "reps": reps, "steps": steps,
+                    "min_s_per_step": round(best, 6), "restarts": restarts})
+    base = next(r for r in out if r["bench"] == "local_off")
+    tolerant = next(r for r in out if r["bench"] == "local_tolerant")
+    limit = base["min_s_per_step"] * REL_SLACK + ABS_SLACK
+    gate = {"bench": "gate", "base_s": base["min_s_per_step"],
+            "tolerant_s": tolerant["min_s_per_step"],
+            "limit_s": round(limit, 6),
+            "ok": tolerant["min_s_per_step"] <= limit}
+    out.append(gate)
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.fault_overhead")
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if fault-free tolerant runs breach the "
+                         "overhead gate")
+    args = ap.parse_args(argv)
+    rs = rows(fast=args.fast)
+    for r in rs:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    gate = next(r for r in rs if r["bench"] == "gate")
+    if args.check and not gate["ok"]:
+        print(f"FAIL: tolerant fault-free step {gate['tolerant_s']}s exceeds "
+              f"{gate['limit_s']}s ({REL_SLACK:.0%} of plain "
+              f"{gate['base_s']}s + {ABS_SLACK}s)")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -50,6 +50,9 @@ def _headline(name: str, rows: list) -> str:
     if name == "trace_overhead":
         gate = [x for x in rows if x["bench"] == "gate"]
         return f"gate_ok={gate[0]['ok']}" if gate else "n/a"
+    if name == "fault_overhead":
+        gate = [x for x in rows if x["bench"] == "gate"]
+        return f"gate_ok={gate[0]['ok']}" if gate else "n/a"
     return f"rows={len(rows)}"
 
 
@@ -57,7 +60,7 @@ def _headline(name: str, rows: list) -> str:
 BENCH_NAMES = (
     "scatter_reduce", "overall_perf", "scaling", "coopt", "planner",
     "bandwidth_scaling", "alibaba", "perfmodel_accuracy", "runtime_accuracy",
-    "roofline", "collectives", "trace_overhead",
+    "roofline", "collectives", "trace_overhead", "fault_overhead",
 )
 
 
@@ -80,6 +83,7 @@ def main(argv=None) -> None:
         bandwidth_scaling,
         collectives_bench,
         coopt_bench,
+        fault_overhead,
         overall_perf,
         perfmodel_accuracy,
         planner_bench,
@@ -103,6 +107,7 @@ def main(argv=None) -> None:
         ("roofline", roofline_bench),                 # deliverable (g)
         ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
         ("trace_overhead", trace_overhead),           # span-recording gate
+        ("fault_overhead", fault_overhead),           # recovery-machinery gate
     ]
     # BENCH_NAMES exists so --list stays import-light; keep it honest
     assert tuple(n for n, _ in benches) == BENCH_NAMES, \

@@ -285,13 +285,17 @@ class DeploymentPlan:
 
     def emulate(self, *, steps: int = 1, contention: bool = False,
                 execution=None, backend="emulated", trace: bool = False,
-                **resolve_kw):
+                faults=None, tolerance=None, **resolve_kw):
         """Execute through the storage-backed engine on an execution
         backend: ``"emulated"`` (virtual-clock cost model), ``"local"``
         (real concurrent workers, wall-clock), or any registered
         :class:`repro.serverless.backends.ExecutionBackend`.  The same saved
         plan JSON drives every backend unmodified.  ``trace=True`` records
-        per-worker spans on the backend's clock (``EngineResult.trace``)."""
+        per-worker spans on the backend's clock (``EngineResult.trace``).
+        ``faults`` (a :class:`~repro.serverless.faults.FaultPlan` or a path
+        to its JSON) chaos-tests the run; ``tolerance``
+        (:class:`~repro.serverless.faults.FaultTolerance`) configures the
+        engine's retry/checkpoint/restart recovery."""
         from repro.serverless.runtime import run_plan
 
         rp = self.resolve(**resolve_kw)
@@ -299,7 +303,8 @@ class DeploymentPlan:
                         rp.total_micro_batches, steps=steps,
                         pipelined_sync=rp.pipelined_sync,
                         contention=contention, execution=execution,
-                        backend=backend, trace=trace)
+                        backend=backend, trace=trace,
+                        faults=faults, tolerance=tolerance)
 
     # ------------------------------------------------------------ describing
     def describe(self) -> str:

@@ -220,14 +220,17 @@ class Session:
         return self
 
     def emulate(self, *, steps: int = 1, execution=None,
-                backend="emulated", trace: bool = False) -> "Session":
+                backend="emulated", trace: bool = False,
+                faults=None, tolerance=None) -> "Session":
         """Execute the plan through the storage-backed runtime engine on the
         chosen execution backend (``"emulated"``, ``"local"``, or an
         :class:`~repro.serverless.backends.ExecutionBackend` instance).
-        ``trace=True`` records per-worker spans (``engine_result.trace``)."""
+        ``trace=True`` records per-worker spans (``engine_result.trace``);
+        ``faults``/``tolerance`` chaos-test the run and configure recovery
+        (see :mod:`repro.serverless.faults`)."""
         self.engine_result = self._require_plan().emulate(
             steps=steps, contention=self.contention, execution=execution,
-            backend=backend, trace=trace,
+            backend=backend, trace=trace, faults=faults, tolerance=tolerance,
             profile=self._merged_profile(), platform=self.platform)
         return self
 

@@ -1,1 +1,8 @@
-from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, FunctionManager  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointError,
+    FunctionManager,
+    pack_state,
+    restore_checkpoint,
+    save_checkpoint,
+    unpack_state,
+)

@@ -4,6 +4,21 @@ Serverless functions time out (15 min on Lambda); the paper's Function
 Manager checkpoints to storage and relaunches workers.  On a pod the same
 mechanism is ordinary periodic checkpointing; we serialize the param/opt
 pytrees with msgpack (structure) + raw npy buffers.
+
+Two surfaces:
+
+* file checkpoints (``save_checkpoint``/``restore_checkpoint``) — atomic
+  tmp-then-rename writes, so a crash mid-write (a truncated ``.tmp``) never
+  corrupts the previous checkpoint;
+* byte-level ``pack_state``/``unpack_state`` — the same wire format without
+  the file, used by the engine to checkpoint stage state *into the object
+  store* (the substrate the paper actually checkpoints to).
+
+Restores validate everything they can — leaf count, the recorded treedef
+string, shapes AND dtypes — and raise :class:`CheckpointError` (not bare
+``assert``, which ``python -O`` strips) on any mismatch: a checkpoint that
+silently restores into the wrong structure or precision would train on,
+wrong, for thousands of steps before anyone noticed.
 """
 from __future__ import annotations
 
@@ -18,16 +33,24 @@ import msgpack
 import numpy as np
 
 
+class CheckpointError(RuntimeError):
+    """A checkpoint payload is malformed or does not match the structure it
+    is being restored into (treedef / leaf count / shape / dtype)."""
+
+
 def _flatten(tree):
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
 
-def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+# ----------------------------------------------------------- wire format
+def pack_state(tree: Any, *, step: int = 0) -> bytes:
+    """Serialize a pytree of arrays to the checkpoint wire format (msgpack
+    structure + raw npy leaf buffers) — what ``save_checkpoint`` writes to
+    disk and the engine puts under ``ckpt/...`` store keys."""
     leaves, treedef = _flatten(tree)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     payload = {
-        "step": step,
+        "step": int(step),
         "treedef": str(treedef),
         "leaves": [],
     }
@@ -36,44 +59,112 @@ def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
         buf = io.BytesIO()
         np.save(buf, arr, allow_pickle=False)
         payload["leaves"].append(buf.getvalue())
+    return msgpack.packb(payload, use_bin_type=True)
+
+
+def unpack_state(blob: bytes, like: Any) -> tuple[Any, int]:
+    """Deserialize :func:`pack_state` bytes into the structure of ``like``,
+    validating treedef, leaf count, shapes and dtypes.  Returns
+    ``(tree, step)``; raises :class:`CheckpointError` on any mismatch."""
+    try:
+        payload = msgpack.unpackb(blob, raw=False)
+    except Exception as e:
+        raise CheckpointError(f"checkpoint payload is not valid msgpack "
+                              f"({type(e).__name__}: {e})") from e
+    if not isinstance(payload, dict) or "leaves" not in payload:
+        raise CheckpointError("checkpoint payload missing 'leaves'")
+    leaves, treedef = _flatten(like)
+    want_def = str(treedef)
+    got_def = payload.get("treedef")
+    if got_def != want_def:
+        raise CheckpointError(
+            f"checkpoint treedef does not match the restore target:\n"
+            f"  checkpoint: {got_def}\n  target:     {want_def}")
+    if len(payload["leaves"]) != len(leaves):
+        raise CheckpointError(
+            f"checkpoint has {len(payload['leaves'])} leaves, restore "
+            f"target has {len(leaves)}")
+    out = []
+    for i, (blob_i, ref) in enumerate(zip(payload["leaves"], leaves)):
+        try:
+            arr = np.load(io.BytesIO(blob_i), allow_pickle=False)
+        except Exception as e:
+            raise CheckpointError(
+                f"checkpoint leaf {i} is not a valid npy buffer "
+                f"({type(e).__name__}: {e})") from e
+        ref_arr = np.asarray(ref) if not hasattr(ref, "shape") else ref
+        if tuple(arr.shape) != tuple(ref_arr.shape):
+            raise CheckpointError(
+                f"checkpoint leaf {i} shape {tuple(arr.shape)} != target "
+                f"shape {tuple(ref_arr.shape)}")
+        if np.dtype(arr.dtype) != np.dtype(ref_arr.dtype):
+            raise CheckpointError(
+                f"checkpoint leaf {i} dtype {np.dtype(arr.dtype)} != target "
+                f"dtype {np.dtype(ref_arr.dtype)}")
+        out.append(jnp.asarray(arr))
+    return jax.tree.unflatten(treedef, out), int(payload.get("step", 0))
+
+
+# ----------------------------------------------------------------- files
+def save_checkpoint(path: str, tree: Any, *, step: int = 0) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    blob = pack_state(tree, step=step)
+    # atomic publish: a crash between write and replace leaves a stray
+    # .tmp but never a torn checkpoint at `path`
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
-        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.write(blob)
     os.replace(tmp, path)
 
 
 def restore_checkpoint(path: str, like: Any) -> tuple[Any, int]:
-    """Restore into the structure of ``like`` (shapes/dtypes asserted)."""
+    """Restore into the structure of ``like`` (treedef/shapes/dtypes
+    validated; :class:`CheckpointError` on mismatch or corruption)."""
     with open(path, "rb") as f:
-        payload = msgpack.unpackb(f.read(), raw=False)
-    leaves, treedef = _flatten(like)
-    assert len(payload["leaves"]) == len(leaves), "checkpoint structure mismatch"
-    out = []
-    for blob, ref in zip(payload["leaves"], leaves):
-        arr = np.load(io.BytesIO(blob), allow_pickle=False)
-        ref_arr = np.asarray(ref) if not hasattr(ref, "shape") else ref
-        assert tuple(arr.shape) == tuple(ref_arr.shape), (arr.shape, ref_arr.shape)
-        out.append(jnp.asarray(arr, dtype=ref_arr.dtype))
-    return jax.tree.unflatten(treedef, out), int(payload["step"])
+        blob = f.read()
+    return unpack_state(blob, like)
 
 
 class FunctionManager:
     """Periodic checkpoint/restart policy: checkpoints whenever the elapsed
     'function lifetime' budget is nearly exhausted (the paper restarts
-    workers before the 15-minute Lambda timeout)."""
+    workers before the 15-minute Lambda timeout).
 
-    def __init__(self, path: str, *, lifetime: float = 15 * 60.0,
-                 safety: float = 0.9):
+    Two clocks, same policy: the wall-clock form (``lifetime`` seconds,
+    used by ``launch/train.py``) and a step-based form (``lifetime_steps``,
+    used by the engine, whose substrate may run on a virtual clock where
+    wall time is meaningless) — ``should_restart(steps_since_launch)`` says
+    when the engine must checkpoint + relaunch to stay under the platform's
+    cap with margin ``safety``.
+    """
+
+    def __init__(self, path: str = "", *, lifetime: float = 15 * 60.0,
+                 safety: float = 0.9,
+                 lifetime_steps: Optional[int] = None):
         self.path = path
         self.lifetime = lifetime
         self.safety = safety
+        self.lifetime_steps = lifetime_steps
         self.started = time.monotonic()
         self.restarts = 0
 
     def should_checkpoint(self) -> bool:
         return (time.monotonic() - self.started) >= self.lifetime * self.safety
 
+    def should_restart(self, steps_since_launch: int) -> bool:
+        """Step-based lifetime policy: restart once the *next* step might
+        cross the cap's safety margin.  ``max(1, ...)`` guarantees progress
+        even under an absurd one-step cap."""
+        if self.lifetime_steps is None:
+            return False
+        budget = max(1, int(self.lifetime_steps * self.safety))
+        return steps_since_launch >= budget
+
     def checkpoint_and_restart(self, tree: Any, step: int) -> None:
         save_checkpoint(self.path, tree, step=step)
-        self.started = time.monotonic()  # simulated relaunch
+        self.restarted()
+
+    def restarted(self) -> None:
+        """Record a relaunch (resets both lifetime clocks)."""
+        self.started = time.monotonic()
         self.restarts += 1

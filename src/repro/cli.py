@@ -340,13 +340,39 @@ def _cmd_emulate(args) -> int:
 
     from repro.serverless.backends import get_backend
 
+    faults_obj, tol = None, None
+    if (args.fault_plan or args.fault_seed is not None
+            or args.retries is not None or args.checkpoint_every is not None):
+        from repro.serverless import faults as F
+
+        if args.fault_plan and args.fault_seed is not None:
+            raise SystemExit("--fault-plan and --fault-seed are mutually "
+                             "exclusive (one names the schedule, the other "
+                             "generates it)")
+        if args.fault_plan:
+            faults_obj = F.FaultPlan.load(args.fault_plan)
+        elif args.fault_seed is not None:
+            faults_obj = F.FaultPlan.generate(
+                args.fault_seed, steps=args.steps,
+                S=sum(rp.config.x) + 1, d=rp.config.d)
+        tol_kw = {}
+        if args.retries is not None:
+            tol_kw["retry"] = F.RetryPolicy(max_attempts=args.retries)
+        if args.checkpoint_every is not None:
+            tol_kw["checkpoint_every"] = args.checkpoint_every
+        tol = F.FaultTolerance(**tol_kw)
+        if faults_obj is not None:
+            print(f"fault plan: {faults_obj.counts() or 'empty'} "
+                  f"(seed={faults_obj.seed})")
+
     with _operator_errors():        # unknown backend name lists the registry
         backend = get_backend(args.backend)
     res = run_plan(rp.profile, rp.platform, rp.config,
                    rp.total_micro_batches, steps=args.steps,
                    pipelined_sync=rp.pipelined_sync,
                    contention=args.contention, execution=ex,
-                   backend=backend, trace=bool(args.trace))
+                   backend=backend, trace=bool(args.trace),
+                   faults=faults_obj, tolerance=tol)
     for k, m in enumerate(res.metrics):
         print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
               f"aux={m['aux']:.4f}")
@@ -364,6 +390,8 @@ def _cmd_emulate(args) -> int:
         per_cls = " ".join(f"{c}={ss.class_bytes_in[c] / MB:.0f}MB"
                            for c in sorted(ss.class_bytes_in))
         print(f"store uploads by key class: {per_cls}")
+    if res.fault_report is not None:
+        print(f"fault tolerance: {res.fault_report.describe()}")
 
     if args.trace:
         # attach the simulator's predicted timeline so `repro inspect` can
@@ -526,6 +554,13 @@ def _cmd_inspect(args) -> int:
             line += f"  {row['up_bw_util']:>7.1%}  {row['dn_bw_util']:>7.1%}"
         print(line)
     print(f"straggler ratio: {h['straggler_ratio']:.3f}")
+    rcv = h.get("recovery")
+    if rcv is not None:
+        print(f"recovery: {rcv['retry_count']} retries "
+              f"({rcv['retry_s']:.3f}s backoff), "
+              f"{rcv['restart_count']} restore reads "
+              f"({rcv['restart_s']:.3f}s, "
+              f"{rcv['restart_bytes'] / MB:.0f}MB re-fetched)")
     for phase in ("fwd", "bwd", "sync"):
         pb = h["phase_bytes"].get(phase)
         if pb:
@@ -649,6 +684,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="record per-worker spans and write a Chrome/Perfetto "
                         "trace with the simulator's predicted timeline "
                         "attached (see `repro inspect`)")
+    p.add_argument("--fault-plan", default=None, metavar="PLAN.json",
+                   help="chaos-test the run: inject faults from a saved "
+                        "FaultPlan JSON; recovery must reproduce the "
+                        "fault-free numbers bit-for-bit")
+    p.add_argument("--fault-seed", type=int, default=None, metavar="N",
+                   help="generate a seeded FaultPlan sized to this run "
+                        "instead of loading --fault-plan")
+    p.add_argument("--retries", type=int, default=None, metavar="N",
+                   help="enable fault tolerance with N max attempts per "
+                        "store op (default 5 when faults are injected)")
+    p.add_argument("--checkpoint-every", type=int, default=None, metavar="N",
+                   help="checkpoint stage state into the object store every "
+                        "N steps (default 1 when fault tolerance is on)")
     p.set_defaults(func=_cmd_emulate)
 
     p = sub.add_parser("inspect",

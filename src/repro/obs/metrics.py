@@ -89,10 +89,27 @@ def pipeline_health(trace: Trace) -> Dict[str, Any]:
         "phase_bytes": phase_bytes,
     }
 
+    # recovery overhead: retry-backoff stalls and checkpoint-restore reads
+    # (the fault-tolerance layer's footprint on the timeline; zero on a
+    # fault-free run)
+    retry = [sp for sp in spans if sp.op == "retry"]
+    restart = [sp for sp in spans if sp.op == "restart"]
+    if retry or restart:
+        out["recovery"] = {
+            "retry_s": sum(sp.duration for sp in retry),
+            "retry_count": len(retry),
+            "restart_s": sum(sp.duration for sp in restart),
+            "restart_count": len(restart),
+            "restart_bytes": sum(sp.nbytes for sp in restart),
+        }
+
     store = meta.get("store")
     if store is not None:
         span_up = sum(sp.nbytes for sp in spans if sp.op == "upload")
-        span_dn = sum(sp.nbytes for sp in spans if sp.op == "download")
+        # checkpoint-restore reads ("restart" op) are real store gets — the
+        # byte-accounting layer counts them, so the span side must too
+        span_dn = sum(sp.nbytes for sp in spans
+                      if sp.op in ("download", "restart"))
         up_ref = float(store.get("bytes_in", 0.0))
         dn_ref = float(store.get("bytes_out", 0.0))
         tol = 1e-6 * max(up_ref, dn_ref, 1.0)

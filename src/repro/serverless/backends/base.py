@@ -89,6 +89,24 @@ class WorkerContext(ABC):
         done (virtual clocks must model this; real serial workers get it
         for free)."""
 
+    def wait(self, seconds: float, op: str = "retry") -> None:
+        """Charge ``seconds`` of idle occupancy on this worker (retry
+        backoff, injected straggle).  Virtual clocks stall the worker's
+        resources and emit an ``op`` span; wall-clock backends sleep.  The
+        default is a no-op so minimal backends stay valid."""
+
+    def fetch(self, key: str, op: str = "download") -> Tuple[Any, Any]:
+        """Non-consuming ``download``: waits for visibility and charges the
+        downlink but leaves the object in the store (checkpoint restores
+        read the same object once per stage worker).  Emits an ``op`` span
+        (``"restart"`` for recovery reads).  Returns ``(value, token)``.
+
+        Default raises — backends that support fault-tolerant recovery
+        must implement it."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement fetch(); this "
+            "backend cannot restore from store-backed checkpoints")
+
 
 class ExecutionBackend(ABC):
     """One storage+invocation substrate a DeploymentPlan can execute on.
@@ -138,6 +156,27 @@ class ExecutionBackend(ABC):
     @abstractmethod
     def store_stats(self) -> StoreStats:
         """Byte-accounting counters of the run's object store."""
+
+    def delete(self, key: str) -> None:
+        """Remove ``key`` from the run's store with counted accounting
+        (engine-side cleanup of checkpoint objects before the final drain
+        check).  Missing keys are ignored."""
+        self._store_for_verification().delete(key)
+
+    def recover(self) -> int:
+        """Reset the substrate after a failed step so the engine can replay
+        from a checkpoint: purge every residual non-checkpoint object (with
+        counted deletes, preserving byte conservation) and revive any
+        aborted machinery.  Returns the number of purged objects.  The
+        default store-purge suffices for backends whose workers hold no
+        cross-step state."""
+        store = self._store_for_verification()
+        purged = 0
+        for key in list(store.keys()):
+            if not key.startswith("ckpt/"):
+                store.delete(key)
+                purged += 1
+        return purged
 
     def verify_drained(self) -> None:
         """Raise if the store holds residual objects or the put/delete byte

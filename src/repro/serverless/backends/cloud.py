@@ -4,16 +4,66 @@ The :class:`ExecutionBackend` contract is everything a real platform needs
 to implement — an object-store client (`put`/`get`/`delete` with the
 platform's visibility semantics) plus a function-invocation surface for the
 ``S x d`` stage workers.  The clients themselves (``boto3`` / ``oss2``) are
-not vendored here; these stubs register the names, carry the wiring notes,
-and fail *at open time* with an actionable message, so ``get_backend("aws")``
-is a valid call today and a drop-in implementation tomorrow — no solver,
-driver or CLI change needed when the real clients land.
+not vendored here; these stubs register the names, carry the real config
+surface (:class:`CloudConfig` — bucket, region, timeouts, credential env
+vars, and the same :class:`~repro.serverless.faults.RetryPolicy` the fault-
+tolerance layer uses), and fail *at open time* with an actionable message,
+so ``get_backend("aws")`` is a valid call today and a drop-in implementation
+tomorrow — no solver, driver or CLI change needed when the real clients
+land.
+
+The fault layer is the acceptance harness for those adapters: a real S3/OSS
+run faces exactly the transient-error/crash/lifetime behaviors
+``FaultInjector`` injects locally, and the adapters inherit the engine's
+recovery machinery (retries per ``CloudConfig.retry``, checkpoint/restart
+via the Function Manager) for free.
 """
 from __future__ import annotations
 
 import importlib.util
+import os
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 from repro.serverless.backends.base import ExecutionBackend
+from repro.serverless.retry import RetryPolicy
+
+
+@dataclass(frozen=True)
+class CloudConfig:
+    """Configuration a real cloud adapter needs — shared with the fault
+    layer so chaos tests and real runs speak the same retry language.
+
+    ``credential_env`` names the environment variables the adapter reads
+    (never stores): an ``open()`` with missing credentials should fail with
+    the variable names, not a client stack trace.
+    """
+
+    bucket: str = ""
+    region: Optional[str] = None
+    endpoint: Optional[str] = None        # OSS/S3-compatible endpoint URL
+    key_prefix: str = "funcpipe/"         # namespace within the bucket
+    retry: RetryPolicy = RetryPolicy()    # transient-error backoff (shared
+    #                                       with the engine's fault layer)
+    connect_timeout_s: float = 5.0
+    read_timeout_s: float = 60.0
+    invoke_timeout_s: float = 900.0       # function-lifetime cap (Lambda: 15m)
+    credential_env: Tuple[str, ...] = ()
+
+    def missing_credentials(self) -> Tuple[str, ...]:
+        """Which of the required credential env vars are unset."""
+        return tuple(v for v in self.credential_env if not os.environ.get(v))
+
+
+AWS_CLOUD_CONFIG = CloudConfig(
+    region="us-east-1",
+    credential_env=("AWS_ACCESS_KEY_ID", "AWS_SECRET_ACCESS_KEY"),
+)
+
+OSS_CLOUD_CONFIG = CloudConfig(
+    endpoint="https://oss-cn-hangzhou.aliyuncs.com",
+    credential_env=("OSS_ACCESS_KEY_ID", "OSS_ACCESS_KEY_SECRET"),
+)
 
 
 class BackendUnavailableError(NotImplementedError):
@@ -29,23 +79,35 @@ class _CloudStub(ExecutionBackend):
     wall_clock = True
     client_module = "?"
     platform_blurb = "?"
+    extra = "?"                    # pip extra that would pull the client in
+    default_config: CloudConfig = CloudConfig()
+
+    def __init__(self, config: Optional[CloudConfig] = None):
+        self.config = config if config is not None else self.default_config
 
     def _unavailable(self) -> "BackendUnavailableError":
         have_client = importlib.util.find_spec(self.client_module) is not None
-        detail = (
-            f"the {self.client_module!r} client is importable but the "
-            f"{self.name} backend's store/invoke adapters are not "
-            "implemented yet"
-            if have_client else
-            f"requires the {self.client_module!r} client, which is not "
-            "installed in this environment"
-        )
+        if have_client:
+            detail = (
+                f"the {self.client_module!r} client is importable but the "
+                f"{self.name} backend's store/invoke adapters are not "
+                "implemented yet")
+        else:
+            detail = (
+                f"requires the {self.client_module!r} client — "
+                f"`pip install repro[{self.extra}]` (or `pip install "
+                f"{self.client_module}`) to pull it in")
+        missing = self.config.missing_credentials()
+        cred = ""
+        if missing:
+            cred = (f"  Credentials: set {', '.join(missing)} before "
+                    "opening this backend.")
         return BackendUnavailableError(
             f"backend {self.name!r} ({self.platform_blurb}) is a stub: "
-            f"{detail}.  Replay the plan on 'emulated' (virtual-clock cost "
-            "model) or 'local' (real concurrency on this host) instead; the "
-            "same DeploymentPlan JSON will drive the real backend unchanged "
-            "once it lands.")
+            f"{detail}.{cred}  Replay the plan on 'emulated' (virtual-clock "
+            "cost model) or 'local' (real concurrency on this host) "
+            "instead; the same DeploymentPlan JSON will drive the real "
+            "backend unchanged once it lands.")
 
     def open(self, agg) -> None:
         raise self._unavailable()
@@ -70,6 +132,8 @@ class AwsS3Backend(_CloudStub):
     name = "aws"
     client_module = "boto3"
     platform_blurb = "AWS Lambda + S3"
+    extra = "aws"
+    default_config = AWS_CLOUD_CONFIG
 
 
 class AliyunOssBackend(_CloudStub):
@@ -78,3 +142,5 @@ class AliyunOssBackend(_CloudStub):
     name = "oss"
     client_module = "oss2"
     platform_blurb = "Alibaba Function Compute + OSS"
+    extra = "oss"
+    default_config = OSS_CLOUD_CONFIG

@@ -55,6 +55,19 @@ class EmulatedWorkerContext(WorkerContext):
     def phase_barrier(self) -> None:
         self.channel.join_uplink_into_downlink()
 
+    def wait(self, seconds: float, op: str = "retry") -> None:
+        # retry backoff / injected straggle: the worker is blocked, so all
+        # three virtual resources stall (numerics pay nothing — time here is
+        # modeled, and the charge is deterministic, keeping chaos runs
+        # bit-identical in time as well as in value)
+        self.channel.stall(seconds, op=op)
+
+    def fetch(self, key: str, op: str = "download"):
+        # non-consuming download (checkpoint restore): charge the downlink,
+        # leave the object live — every stage worker of the stage reads the
+        # same checkpoint object once
+        return self.channel.download(key, ready=self.channel.dn_free, op=op)
+
 
 class EmulatedBackend(ExecutionBackend):
     """Today's emulated store + virtual clocks behind the backend API."""

@@ -37,11 +37,21 @@ from repro.serverless.backends.base import (
     WorkerProgram,
 )
 from repro.serverless.runtime.scatter_reduce import local_scatter_reduce
-from repro.serverless.runtime.store import StoreStats
+from repro.serverless.runtime.store import (
+    ProducerDeadError,
+    StoreAbortedError,
+    StoreStats,
+    producer_of_key,
+    producer_worker_of_key,
+)
 
 # deadlock backstop: a blocking get that outwaits this is a lost producer
 # (a peer worker thread died), not a slow one
 DEFAULT_GET_TIMEOUT = 120.0
+
+# a producer whose last heartbeat is older than this is *dead*, not slow:
+# its consumers fail over immediately instead of burning the get timeout
+DEFAULT_LEASE_TIMEOUT = 5.0
 
 # S x d real threads; past this the run would be measuring the host's
 # scheduler, not the plan — replay large plans on the emulated backend
@@ -65,19 +75,70 @@ class LocalStore:
     boundary objects.  ``nbytes`` is the *modeled* object size (the same
     numbers the emulated store charges), kept for byte accounting; payloads
     ride in memory, or through ``fs_root`` files when given.
+
+    Liveness: workers ``heartbeat()`` as they make progress and are
+    ``mark_dead()``-ed when their thread dies.  A blocked ``get`` checks the
+    awaited key's *producer lease* (the engine key schema names exactly one
+    producer worker per key): a dead or heartbeat-stale producer raises
+    :class:`ProducerDeadError` immediately — "dead", not "slow" — instead of
+    burning the full get timeout.  ``abort()`` poisons the store, waking
+    every waiter with :class:`StoreAbortedError`; ``revive()`` un-poisons it
+    for the engine's recovery replay.
     """
 
     def __init__(self, timeout: float = DEFAULT_GET_TIMEOUT,
-                 fs_root: Optional[str] = None):
+                 fs_root: Optional[str] = None,
+                 lease_timeout: float = DEFAULT_LEASE_TIMEOUT):
         self.timeout = timeout
+        self.lease_timeout = lease_timeout
         self.fs_root = fs_root
         self._cv = threading.Condition()
         self._objects: Dict[str, _Stored] = {}
         self._live_bytes = 0.0
         self._seq = 0
+        self._poison: Optional[BaseException] = None
+        self._heartbeats: Dict[Tuple[int, int], float] = {}
+        self._dead: set = set()
         self.stats = StoreStats()
         if fs_root is not None:
             os.makedirs(fs_root, exist_ok=True)
+
+    # ------------------------------------------------------ liveness / leases
+    def heartbeat(self, worker: Tuple[int, int]) -> None:
+        """Record that worker (stage, replica) is alive and making progress
+        (called by its context on every store/compute op)."""
+        with self._cv:
+            self._heartbeats[worker] = time.monotonic()
+
+    def mark_dead(self, worker: Tuple[int, int]) -> None:
+        """Declare a worker dead (its thread raised); wakes every waiter so
+        consumers of its keys fail over immediately."""
+        with self._cv:
+            self._dead.add(worker)
+            self._cv.notify_all()
+
+    def heartbeat_age(self, worker: Tuple[int, int]) -> Optional[float]:
+        """Seconds since the worker's last heartbeat (None: never beat)."""
+        with self._cv:
+            beat = self._heartbeats.get(worker)
+        return None if beat is None else time.monotonic() - beat
+
+    def abort(self, reason: BaseException) -> None:
+        """Poison the store: every current and future blocking op raises
+        :class:`StoreAbortedError` naming ``reason`` (the first worker death
+        of the step) instead of hanging until its timeout."""
+        with self._cv:
+            if self._poison is None:
+                self._poison = reason
+            self._cv.notify_all()
+
+    def revive(self) -> None:
+        """Clear poison and liveness state for a recovery replay (the
+        engine respawns every worker, so old leases are meaningless)."""
+        with self._cv:
+            self._poison = None
+            self._dead.clear()
+            self._heartbeats.clear()
 
     # ----------------------------------------------------------- fs payloads
     def _spill(self, value: Any) -> Optional[str]:
@@ -120,13 +181,60 @@ class LocalStore:
             self._cv.notify_all()
 
     def _wait_for(self, key: str) -> _Stored:
-        ok = self._cv.wait_for(lambda: key in self._objects,
-                               timeout=self.timeout)
-        if not ok:
-            raise TimeoutError(
-                f"object {key!r} never became visible within "
-                f"{self.timeout:.0f}s — a producer worker likely died")
-        return self._objects[key]
+        deadline = time.monotonic() + self.timeout
+        producer = producer_worker_of_key(key)
+        while True:
+            if self._poison is not None:
+                raise StoreAbortedError(
+                    f"store aborted while waiting for {key!r}: "
+                    f"{self._poison}") from self._poison
+            if key in self._objects:
+                return self._objects[key]
+            if producer is not None:
+                if producer in self._dead:
+                    raise ProducerDeadError(
+                        f"object {key!r} will never arrive: its producer "
+                        f"worker (stage {producer[0]}, replica "
+                        f"{producer[1]}) died")
+                beat = self._heartbeats.get(producer)
+                if (beat is not None
+                        and time.monotonic() - beat > self.lease_timeout):
+                    raise ProducerDeadError(
+                        f"object {key!r} will never arrive: its producer "
+                        f"worker (stage {producer[0]}, replica "
+                        f"{producer[1]}) stopped heartbeating "
+                        f"{time.monotonic() - beat:.1f}s ago (lease "
+                        f"timeout {self.lease_timeout:.0f}s)")
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(self._diagnose_timeout_locked(key))
+            # woken early by put/abort/mark_dead; the poll interval only
+            # bounds how late a *silently* stale heartbeat is noticed
+            self._cv.wait(min(remaining, self.lease_timeout / 4.0, 0.25))
+
+    def _diagnose_timeout_locked(self, key: str) -> str:
+        """Rich get-timeout message (caller holds the lock): the missing
+        key, which keys *do* exist, who held the producer lease, and how
+        stale its heartbeat is — a statement, not a guess."""
+        producer = producer_worker_of_key(key)
+        existing = sorted(self._objects)
+        sample = ", ".join(existing[:8]) if existing else "none"
+        if producer is None:
+            who = producer_of_key(key)
+            lease = f"no producer lease on record ({who})"
+        else:
+            age = None
+            beat = self._heartbeats.get(producer)
+            if beat is not None:
+                age = time.monotonic() - beat
+            state = ("marked dead" if producer in self._dead
+                     else f"last heartbeat {age:.1f}s ago" if age is not None
+                     else "never heartbeat")
+            lease = (f"producer lease held by worker (stage {producer[0]}, "
+                     f"replica {producer[1]}) — {state}")
+        return (f"object {key!r} never became visible within "
+                f"{self.timeout:.0f}s; {lease}; "
+                f"{len(existing)} keys present (e.g. [{sample}])")
 
     def get(self, key: str, return_nbytes: bool = False) -> Any:
         """Block until ``key`` is visible, then return its payload (or a
@@ -188,12 +296,19 @@ class LocalWorkerContext(WorkerContext):
     the stall the timeline should show.
     """
 
-    def __init__(self, store: LocalStore, tracer=None, clock=None):
+    def __init__(self, store: LocalStore, tracer=None, clock=None,
+                 worker: Optional[Tuple[int, int]] = None):
         self.store = store
         self.tracer = tracer
         self.clock = clock
+        self.worker = worker
+
+    def _beat(self) -> None:
+        if self.worker is not None:
+            self.store.heartbeat(self.worker)
 
     def download(self, key: str):
+        self._beat()
         if self.tracer is None:
             return self.store.take(key), None
         t0 = self.clock()
@@ -204,6 +319,7 @@ class LocalWorkerContext(WorkerContext):
     def compute(self, cost_s: float, fn: Optional[Callable[[], Any]] = None,
                 after: Any = None) -> Any:
         # modeled cost is the virtual clock's business; here compute is real
+        self._beat()
         if self.tracer is None:
             return fn() if fn is not None else None
         t0 = self.clock()
@@ -212,6 +328,7 @@ class LocalWorkerContext(WorkerContext):
         return out
 
     def upload(self, key: str, nbytes: float, value: Any = None) -> Any:
+        self._beat()
         if self.tracer is None:
             self.store.put(key, nbytes, value=value)
             return None
@@ -223,9 +340,51 @@ class LocalWorkerContext(WorkerContext):
     def phase_barrier(self) -> None:
         # a serial worker's forward uploads complete before it proceeds;
         # for tracing this is also the worker's fwd -> bwd phase flip
+        self._beat()
         if self.tracer is not None:
             self.tracer.phase = "bwd"
         return None
+
+    def wait(self, seconds: float, op: str = "retry") -> None:
+        # real backoff on the wall-clock backend (the time is honest, and
+        # the op span makes recovery overhead visible in the trace)
+        self._beat()
+        if self.tracer is None:
+            time.sleep(seconds)
+            return
+        t0 = self.clock()
+        time.sleep(seconds)
+        self.tracer.emit(op, t0, self.clock())
+
+    def fetch(self, key: str, op: str = "download"):
+        # non-consuming blocking get (checkpoint restore)
+        self._beat()
+        if self.tracer is None:
+            return self.store.get(key), None
+        t0 = self.clock()
+        value, nb = self.store.get(key, return_nbytes=True)
+        self.tracer.emit(op, t0, self.clock(), nbytes=nb, key=key)
+        return value, None
+
+
+def _primary_error(errors: List[BaseException]) -> BaseException:
+    """The error that *caused* a failed step, not its collateral: an
+    exceeded tolerance budget must surface over the crash it wraps, a crash
+    over the StoreAborted/BrokenBarrier/Timeout wreckage it strands its
+    peers in."""
+    def rank(e: BaseException) -> int:
+        name = type(e).__name__
+        if name == "FaultToleranceExceeded":
+            return 0
+        if name == "WorkerCrashed":
+            return 1
+        if name == "TransientStoreError":
+            return 2
+        if isinstance(e, (StoreAbortedError, ProducerDeadError,
+                          threading.BrokenBarrierError, TimeoutError)):
+            return 4
+        return 3
+    return min(errors, key=rank)
 
 
 class LocalBackend(ExecutionBackend):
@@ -235,9 +394,11 @@ class LocalBackend(ExecutionBackend):
     wall_clock = True
 
     def __init__(self, *, fs_root: Optional[str] = None,
-                 get_timeout: float = DEFAULT_GET_TIMEOUT):
+                 get_timeout: float = DEFAULT_GET_TIMEOUT,
+                 lease_timeout: float = DEFAULT_LEASE_TIMEOUT):
         self.fs_root = fs_root
         self.get_timeout = get_timeout
+        self.lease_timeout = lease_timeout
         self.agg = None
         self.store: Optional[LocalStore] = None
         self._t0 = 0.0
@@ -256,10 +417,17 @@ class LocalBackend(ExecutionBackend):
                 "— replay this plan on the emulated backend instead")
         self.agg = agg
         self.store = LocalStore(timeout=self.get_timeout,
-                                fs_root=self.fs_root)
+                                fs_root=self.fs_root,
+                                lease_timeout=self.lease_timeout)
         self._tracers = {}
         self._steps_done = 0
         self._t0 = time.perf_counter()
+
+    def recover(self) -> int:
+        """Revive the poisoned store and purge residual non-checkpoint keys
+        so the engine can replay from the last checkpoint."""
+        self.store.revive()
+        return super().recover()
 
     def _clock(self) -> float:
         """Seconds since run start — the trace's wall-clock time base."""
@@ -267,12 +435,13 @@ class LocalBackend(ExecutionBackend):
 
     def context(self, s: int, r: int) -> LocalWorkerContext:
         if self.recorder is None:
-            return LocalWorkerContext(self.store)
+            return LocalWorkerContext(self.store, worker=(s, r))
         tr = self.recorder.tracer(s, r)
         tr.step = self._steps_done
         tr.phase = "fwd"
         self._tracers[(s, r)] = tr
-        return LocalWorkerContext(self.store, tracer=tr, clock=self._clock)
+        return LocalWorkerContext(self.store, tracer=tr, clock=self._clock,
+                                  worker=(s, r))
 
     @property
     def store_stats(self) -> StoreStats:
@@ -317,8 +486,13 @@ class LocalBackend(ExecutionBackend):
             except BaseException as e:  # propagate to the main thread
                 with err_lock:
                     errors.append(e)
-                # a died worker starves its peers' blocking gets; their
-                # store timeout turns the hang into a TimeoutError
+                # a died worker starves its peers' blocking gets *and* their
+                # sync barrier: mark it dead, poison the store and break the
+                # barriers so every peer fails over now, not at timeout
+                self.store.mark_dead((s, r))
+                self.store.abort(e)
+                for b in barriers.values():
+                    b.abort()
 
         threads = [
             threading.Thread(target=drive, args=(s, r, gen),
@@ -330,7 +504,7 @@ class LocalBackend(ExecutionBackend):
         for t in threads:
             t.join()
         if errors:
-            raise errors[0]
+            raise _primary_error(errors)
 
         sync = 0.0
         for s in range(S):

@@ -1,0 +1,37 @@
+"""Retry policy for transient store errors (dependency-free).
+
+Lives in its own module because both ends of the stack need it without
+importing each other: the engine's fault-tolerance layer
+(``repro.serverless.faults``) retries with it, and the cloud adapter config
+surface (``repro.serverless.backends.cloud.CloudConfig``) carries it so real
+S3/OSS runs and chaos tests speak the same backoff language.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic jitter for transient store
+    errors.  ``delay(attempt, token)`` is a pure function of the policy, the
+    attempt number and the token (usually the store key), so retried runs
+    charge identical backoff on the virtual clock — chaos runs replay
+    bit-identically in time as well as in value."""
+
+    max_attempts: int = 5
+    base_delay_s: float = 0.05
+    multiplier: float = 2.0
+    max_delay_s: float = 2.0
+    jitter: float = 0.25            # +- fraction of the backoff
+    seed: int = 0
+
+    def delay(self, attempt: int, token: str = "") -> float:
+        d = min(self.base_delay_s * self.multiplier ** max(0, attempt - 1),
+                self.max_delay_s)
+        if self.jitter:
+            h = zlib.crc32(f"{self.seed}:{token}:{attempt}".encode())
+            u = 2.0 * (h / 0xFFFFFFFF) - 1.0          # [-1, 1], deterministic
+            d *= 1.0 + self.jitter * u
+        return d

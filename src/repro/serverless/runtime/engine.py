@@ -39,6 +39,7 @@ bill depends on exactly this invariant holding across steps).
 """
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Union
 
@@ -66,6 +67,8 @@ class Execution:
     batch_fn: Callable[[int], dict]           # step -> global batch (leaves [B, ...])
     jit: bool = True                          # jit-cache stage fwd/bwd per shape
     remat: bool = False                       # recompute fwd in bwd (A/B only)
+    tolerance: Optional[Any] = None           # faults.FaultTolerance (retry /
+    #                                           checkpoint / restart policy)
 
 
 @dataclass(frozen=True)
@@ -83,6 +86,8 @@ class EngineResult:
     params: Optional[dict] = None          # final assembled params (numeric mode)
     store_stats: Optional[StoreStats] = None
     trace: Optional[Any] = None            # repro.obs.Trace (trace=True runs)
+    fault_report: Optional[Any] = None     # faults.FaultReport (chaos /
+    #                                        fault-tolerant runs), else None
 
     @property
     def losses(self) -> List[float]:
@@ -177,6 +182,8 @@ def run_plan(
     execution: Optional[Execution] = None,
     backend: Union[str, ExecutionBackend] = "emulated",
     trace: bool = False,
+    faults: Optional[Any] = None,
+    tolerance: Optional[Any] = None,
 ) -> EngineResult:
     """Execute ``steps`` training iterations of the plan through a backend.
 
@@ -187,7 +194,17 @@ def run_plan(
     :class:`ExecutionBackend` instance.  ``trace=True`` records one span per
     worker resource task (download/compute/upload/barrier, plus per-chunk
     scatter-reduce transfers) on the backend's clock and returns it as
-    ``EngineResult.trace`` (a :class:`repro.obs.Trace`)."""
+    ``EngineResult.trace`` (a :class:`repro.obs.Trace`).
+
+    Fault tolerance: ``faults`` (a :class:`repro.serverless.faults.FaultPlan`
+    or a path to its JSON) wraps the backend in a chaos
+    :class:`~repro.serverless.faults.FaultInjector`; ``tolerance`` (a
+    :class:`~repro.serverless.faults.FaultTolerance`, also settable via
+    ``Execution.tolerance``) enables the recovery machinery — retry with
+    backoff on transient store errors, per-stage param/opt checkpoints into
+    the object store every N steps, and checkpoint/restart of the whole
+    worker grid on a crash or function-lifetime expiry.  A chaos run must
+    train to params bit-identical to the fault-free run."""
     from repro.serverless.backends import get_backend
 
     profile, platform, config, total_micro_batches, pipelined_sync = \
@@ -198,6 +215,47 @@ def run_plan(
     S, mu, d = agg.S, agg.mu, agg.d
     be = get_backend(backend)
 
+    # ------------------------------------------------- fault-tolerance setup
+    # lazy import: runtime/__init__ imports this module at package-import
+    # time, and faults.py imports backends (which imports runtime.store)
+    report = None
+    faults_obj = None
+    tol = tolerance
+    if tol is None and execution is not None:
+        tol = execution.tolerance
+    if faults is not None or tol is not None:
+        from repro.serverless import faults as F
+
+        if faults is not None:
+            faults_obj = (F.FaultPlan.load(faults) if isinstance(faults, str)
+                          else faults)
+            if tol is None:
+                tol = F.FaultTolerance()    # chaos implies recovery
+        report = F.FaultReport()
+        if faults_obj is not None:
+            be = F.FaultInjector(be, faults_obj, report)
+        # the Function Manager's lifetime policy: an explicit tolerance cap
+        # wins; otherwise the engine knows the platform's cap the same way
+        # it knows Lambda's 15 minutes — from the environment (fault plan)
+        fm = None
+        if tol is not None:
+            cap = tol.lifetime_steps
+            if cap is None and faults_obj is not None:
+                cap = faults_obj.lifetime_steps
+            if cap is not None:
+                from repro.checkpoint import FunctionManager
+
+                fm = FunctionManager(lifetime_steps=cap,
+                                     safety=tol.lifetime_safety)
+    else:
+        fm = None
+
+    def mk_ctx(s: int, r: int):
+        ctx = be.context(s, r)
+        if tol is not None:
+            ctx = F.ResilientContext(ctx, tol.retry, report)
+        return ctx
+
     recorder = None
     if trace:
         from repro.obs import SpanRecorder
@@ -205,53 +263,162 @@ def run_plan(
         recorder = SpanRecorder()
         be.attach_recorder(recorder)
 
-    workers = None
-    if execution is not None:
-        from repro.serverless.runtime.worker import StageWorker, stage_instance_ranges
+    def make_workers():
+        from repro.serverless.runtime.worker import (
+            StageWorker,
+            stage_instance_ranges,
+        )
 
         spans = stage_instance_ranges(execution.cfg, config.x)
         assert len(spans) == S
-        workers = [[StageWorker(execution.cfg, spans[s], execution.init_params,
-                                mu=mu, optimizer=execution.optimizer,
-                                jit=execution.jit, remat=execution.remat)
-                    for r in range(d)] for s in range(S)]
+        return [[StageWorker(execution.cfg, spans[s], execution.init_params,
+                             mu=mu, optimizer=execution.optimizer,
+                             jit=execution.jit, remat=execution.remat)
+                 for r in range(d)] for s in range(S)]
+
+    workers = make_workers() if execution is not None else None
 
     be.open(agg)
-    metrics: List[Dict[str, float]] = []
-    iter_ends: List[float] = []
-    sync_durations: List[float] = []
+    metrics_by_step: Dict[int, Dict[str, float]] = {}
+    iter_ends: Dict[int, float] = {}
+    sync_durations: Dict[int, float] = {}
 
+    # ------------------------------------------------ checkpoint / restart
+    last_ckpt_step = -1          # state-after-step index of the newest ckpt
+    ckpt_stages: set = set()     # stages with a live ckpt/s{s} object
+
+    def write_checkpoint(k_done: int) -> None:
+        """Checkpoint every stage's param/opt state into the object store
+        (state after step ``k_done``), charged like any upload.  Replicas
+        hold identical state, so one object per stage suffices."""
+        nonlocal last_ckpt_step
+        from repro.checkpoint import pack_state
+
+        for s in range(S):
+            blob = None
+            if workers is not None:
+                blob = pack_state(workers[s][0].export_state(),
+                                  step=k_done + 1)
+                nbytes = float(len(blob))
+            else:
+                # timing-only: fp32 masters + two moments alongside the
+                # stage's params — the modeled checkpoint payload
+                nbytes = 3.0 * float(agg.s_stage[s])
+            mk_ctx(s, 0).upload(f"ckpt/s{s}", nbytes, value=blob)
+            ckpt_stages.add(s)
+        last_ckpt_step = k_done
+        report.checkpoints += 1
+
+    def restore_from_checkpoint() -> None:
+        """Relaunch the worker grid from the newest store checkpoint (or
+        from scratch when none exists yet): every worker re-fetches its
+        stage's state — ``op="restart"`` spans — and resets its transient
+        step state.  Bit-identical to having never crashed."""
+        nonlocal workers
+        from repro.checkpoint import unpack_state
+
+        if last_ckpt_step < 0:
+            # nothing persisted yet: rebuild from initial state
+            if execution is not None:
+                workers = make_workers()
+            return
+        for s in range(S):
+            state = None
+            for r in range(d):
+                value, _ = mk_ctx(s, r).fetch(f"ckpt/s{s}", op="restart")
+                if workers is not None:
+                    if state is None:
+                        state, _step = unpack_state(
+                            value, workers[s][r].export_state())
+                    workers[s][r].load_state(state)
+
+    restarts = 0
+    steps_since_launch = 0
+    pending_restore = False
+    k = 0
     try:
-        for k in range(steps):
-            batch = execution.batch_fn(k) if execution is not None else None
-            losses: Dict = {}
-            programs = {
-                (s, r): _worker_step_program(
-                    be.context(s, r), k=k, s=s, r=r, agg=agg,
-                    worker=None if workers is None else workers[s][r],
-                    batch=batch, losses=losses)
-                for s in range(S) for r in range(d)
-            }
-            timing = be.run_step(k, programs, pipelined_sync=pipelined_sync)
-            iter_ends.append(timing.end)
-            sync_durations.append(timing.sync)
+        while k < steps:
+            try:
+                if pending_restore:
+                    t0r = _time.perf_counter()
+                    restore_from_checkpoint()
+                    report.recovery_s += _time.perf_counter() - t0r
+                    pending_restore = False
+                if fm is not None and fm.should_restart(steps_since_launch):
+                    # planned relaunch under the platform's lifetime cap —
+                    # checkpoint current progress, recycle the functions,
+                    # restore (the paper's Function Manager, §3.1 ⑧)
+                    if last_ckpt_step < k - 1:
+                        write_checkpoint(k - 1)
+                    be.recover()
+                    fm.restarted()
+                    report.planned_restarts += 1
+                    t0r = _time.perf_counter()
+                    restore_from_checkpoint()
+                    report.recovery_s += _time.perf_counter() - t0r
+                    steps_since_launch = 0
+                batch = (execution.batch_fn(k)
+                         if execution is not None else None)
+                losses: Dict = {}
+                programs = {
+                    (s, r): _worker_step_program(
+                        mk_ctx(s, r), k=k, s=s, r=r, agg=agg,
+                        worker=None if workers is None else workers[s][r],
+                        batch=batch, losses=losses)
+                    for s in range(S) for r in range(d)
+                }
+                timing = be.run_step(k, programs,
+                                     pipelined_sync=pipelined_sync)
+            except Exception as e:
+                from repro.serverless import faults as F
+
+                if tol is None or not F.is_recoverable(e):
+                    raise
+                if restarts >= tol.max_restarts:
+                    raise F.FaultToleranceExceeded(
+                        f"step {k} still failing after {restarts} restarts "
+                        f"(max_restarts={tol.max_restarts}): {e}") from e
+                restarts += 1
+                report.restarts += 1
+                be.recover()        # purge residual keys, revive the store
+                k = last_ckpt_step + 1
+                report.resumed_steps.append(k)
+                steps_since_launch = 0
+                pending_restore = True
+                continue
+            # ---------------------------------------------- step succeeded
+            # keyed by step index: a replayed step overwrites its earlier,
+            # aborted attempt's bookkeeping
+            iter_ends[k] = timing.end
+            sync_durations[k] = timing.sync
             if workers is not None:
                 ce_sum = sum(losses[(S - 1, r)][0] for r in range(d))
                 aux_sum = sum(losses[(s, r)][1]
                               for s in range(S) for r in range(d))
-                metrics.append({"ce": ce_sum, "aux": aux_sum,
-                                "loss": ce_sum + aux_sum})
+                metrics_by_step[k] = {"ce": ce_sum, "aux": aux_sum,
+                                      "loss": ce_sum + aux_sum}
+            if (tol is not None and tol.checkpoint_every
+                    and (k + 1) % tol.checkpoint_every == 0
+                    and k + 1 < steps):
+                write_checkpoint(k)
+            k += 1
+            steps_since_launch += 1
+        # checkpoint objects are engine-owned state, not leaked traffic:
+        # delete them (counted) before asserting the drain invariant
+        for s in sorted(ckpt_stages):
+            be.delete(f"ckpt/s{s}")
         be.verify_drained()
         stats = be.store_stats
     finally:
         be.close()
+    metrics = [metrics_by_step[i] for i in sorted(metrics_by_step)]
 
-    t_total = iter_ends[-1]
+    t_total = iter_ends[steps - 1]
     t_iter = t_total / steps
     mem_total = d * float(agg.mem.sum())
     cost = platform.price_per_gb_s * (mem_total / GB) * t_iter
     comp = float(agg.t_fc.sum() + agg.t_bc.sum())
-    sync_t = float(np.mean(sync_durations))
+    sync_t = float(np.mean([sync_durations[i] for i in sorted(sync_durations)]))
     params = None
     if workers is not None:
         from repro.serverless.runtime.worker import assemble_params
@@ -272,13 +439,16 @@ def run_plan(
                 "n_workers": agg.n_workers,
                 "t_total": float(t_total),
                 "t_iter": float(t_iter),
-                "step_ends": [float(t) for t in iter_ends],
-                "step_syncs": [float(t) for t in sync_durations],
+                "step_ends": [float(iter_ends[i]) for i in sorted(iter_ends)],
+                "step_syncs": [float(sync_durations[i])
+                               for i in sorted(sync_durations)],
                 "bandwidth": [float(w) for w in agg.w],
                 "pipelined_sync": bool(pipelined_sync),
                 "store": stats.as_dict(),
             },
         )
+        if report is not None:
+            trace_obj.meta["fault_report"] = report.as_dict()
     return EngineResult(
         t_iter=float(t_iter),
         t_total=float(t_total),
@@ -297,4 +467,5 @@ def run_plan(
         params=params,
         store_stats=stats,
         trace=trace_obj,
+        fault_report=report,
     )

@@ -46,8 +46,11 @@ class StoredObject:
 def classify_key(key: str) -> str:
     """Key class for the per-prefix byte breakdown: the engine's keys are
     ``k{k}/r{r}/m{m}/act{s}`` (forward activations), ``.../grad{s}``
-    (backward boundary gradients) and ``k{k}/sync{s}/part|red/...``
-    (scatter-reduce chunks — parameter-gradient traffic)."""
+    (backward boundary gradients), ``k{k}/sync{s}/part|red/...``
+    (scatter-reduce chunks — parameter-gradient traffic) and ``ckpt/s{s}``
+    (the Function Manager's store-backed stage checkpoints)."""
+    if key.startswith("ckpt/"):
+        return "ckpt"
     if "/part/" in key or "/red/" in key:
         return "sync"
     base = key.rsplit("/", 1)[-1]
@@ -56,6 +59,74 @@ def classify_key(key: str) -> str:
     if base.startswith("grad"):
         return "grad"
     return "other"
+
+
+def producer_worker_of_key(key: str):
+    """Infer the (stage, replica) that produces ``key`` under the engine's
+    key schema, or ``None`` when the key is outside it.  This is the
+    producer-*lease* rule the LocalStore's liveness diagnostics use: every
+    engine key has exactly one producer worker."""
+    try:
+        parts = key.split("/")
+        base = parts[-1]
+        if key.startswith("ckpt/"):
+            return None
+        if len(parts) >= 4 and parts[1].startswith("sync"):
+            stage = int(parts[1][4:])
+            if parts[2] == "part":
+                # k{k}/sync{s}/part/{j}/{i}: uploaded by replica i
+                return (stage, int(parts[4]))
+            # k{k}/sync{s}/red/{j}: reduced by the owner replica of chunk j
+            return (stage, int(parts[3]))
+        replica = int(parts[1][1:])
+        if base.startswith("act"):
+            return (int(base[3:]), replica)
+        if base.startswith("grad"):
+            return (int(base[4:]) + 1, replica)
+    except (ValueError, IndexError):
+        pass
+    return None
+
+
+def producer_of_key(key: str, x=None) -> str:
+    """Best-effort human description of which worker produces ``key`` under
+    the engine's key schema (used by store-timeout diagnostics when no
+    explicit lease was recorded).  ``k{k}/r{r}/m{m}/act{s}`` is uploaded by
+    stage ``s`` of replica ``r``; ``.../grad{s}`` by stage ``s+1``;
+    ``k{k}/sync{s}/part/{j}/{i}`` by replica ``i`` of stage ``s``;
+    ``.../red/{j}`` by the owner replica of chunk ``j``."""
+    try:
+        parts = key.split("/")
+        base = parts[-1]
+        if key.startswith("ckpt/"):
+            return "the engine's checkpoint writer"
+        if "sync" in key and len(parts) >= 4:
+            stage = int(parts[1][4:])
+            if parts[2] == "part":
+                return (f"replica {int(parts[4])} of stage {stage} "
+                        "(scatter-reduce part)")
+            return (f"the owner replica of chunk {int(parts[3])} at stage "
+                    f"{stage} (scatter-reduce reduced chunk)")
+        replica = int(parts[1][1:])
+        if base.startswith("act"):
+            return f"worker (stage {int(base[3:])}, replica {replica})"
+        if base.startswith("grad"):
+            return f"worker (stage {int(base[4:]) + 1}, replica {replica})"
+    except (ValueError, IndexError):
+        pass
+    return "an unknown producer (key outside the engine schema)"
+
+
+class StoreAbortedError(RuntimeError):
+    """The store was poisoned because a worker died: every blocked consumer
+    is woken with this instead of burning its full get-timeout.  The engine
+    treats it as recoverable collateral of the originating crash."""
+
+
+class ProducerDeadError(RuntimeError):
+    """A consumer's lease check found the producer of the awaited key dead
+    (no heartbeat within the lease timeout) — 'dead', not merely 'slow', so
+    the consumer fails over to recovery immediately."""
 
 
 @dataclass
@@ -244,7 +315,8 @@ class StageChannel:
             self.tracer.emit("upload", start, end, nbytes=nbytes, key=key)
         return end
 
-    def download(self, key: str, ready: float = 0.0, new_request: bool = True):
+    def download(self, key: str, ready: float = 0.0, new_request: bool = True,
+                 op: str = "download"):
         obj = self.store.get(key)
         # span start is when the transfer begins — the visibility wait shows
         # up as a gap (bubble), not as link occupancy
@@ -252,9 +324,22 @@ class StageChannel:
         end = start + obj.nbytes / self.bandwidth + (self.latency if new_request else 0.0)
         self.dn_free = end
         if self.tracer is not None:
-            self.tracer.emit("download", start, end, nbytes=obj.nbytes,
+            self.tracer.emit(op, start, end, nbytes=obj.nbytes,
                              key=key)
         return obj.value, end
+
+    def stall(self, duration: float, op: str = "retry") -> float:
+        """Charge ``duration`` of idle occupancy across *all* resources (the
+        worker is blocked in a retry backoff or an injected straggle — it
+        can neither compute nor transfer).  Emits one ``op`` span."""
+        start = self.now
+        end = start + duration
+        self.cpu_free = max(self.cpu_free, end)
+        self.up_free = max(self.up_free, end)
+        self.dn_free = max(self.dn_free, end)
+        if self.tracer is not None:
+            self.tracer.emit(op, start, end)
+        return end
 
     # --------------------------------------------------------------- ordering
     def join_uplink_into_downlink(self) -> None:

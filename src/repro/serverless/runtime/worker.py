@@ -306,6 +306,31 @@ class StageWorker:
         self._accumulate(g_params)
         return g_in
 
+    # ------------------------------------------------------------ checkpoints
+    def export_state(self) -> dict:
+        """The stage's full persistent state — params + fp32 masters +
+        optimizer moments — as a plain pytree of arrays.  Everything else
+        (cached VJP residuals, gradient accumulators, jit caches) is
+        per-step transient: a worker restored from this tree at a step
+        boundary continues bit-identically."""
+        return {"params": self.params, "opt_state": self.opt_state}
+
+    def load_state(self, state: dict) -> None:
+        """Restore from :meth:`export_state` (the Function Manager's
+        relaunch path).  Resets every transient accumulator — a relaunched
+        function starts its step from scratch."""
+        treedef = jax.tree.structure(self.params)
+        if jax.tree.structure(state["params"]) != treedef:
+            raise ValueError(
+                f"checkpointed stage state does not match stage {self.span.index}: "
+                f"{jax.tree.structure(state['params'])} != {treedef}")
+        self.params = jax.tree.map(jnp.asarray, state["params"])
+        self.opt_state = jax.tree.map(jnp.asarray, state["opt_state"])
+        self._vjps.clear()
+        self._saved_inputs.clear()
+        self._saved_sigs.clear()
+        self._grad_acc = None
+
     # ------------------------------------------------------------------- sync
     def grad_vector(self) -> np.ndarray:
         """Accumulated stage gradient, flattened fp32 (scatter-reduce payload)."""
