@@ -285,19 +285,35 @@ class DeploymentPlan:
 
     def emulate(self, *, steps: int = 1, contention: bool = False,
                 execution=None, backend="emulated", trace: bool = False,
-                faults=None, tolerance=None, **resolve_kw):
+                faults=None, tolerance=None, payload_true: bool = False,
+                throttle: bool = False, **resolve_kw):
         """Execute through the storage-backed engine on an execution
         backend: ``"emulated"`` (virtual-clock cost model), ``"local"``
-        (real concurrent workers, wall-clock), or any registered
+        (real concurrent workers, wall-clock), ``"process"`` (real OS
+        worker processes over a file store), or any registered
         :class:`repro.serverless.backends.ExecutionBackend`.  The same saved
         plan JSON drives every backend unmodified.  ``trace=True`` records
         per-worker spans on the backend's clock (``EngineResult.trace``).
         ``faults`` (a :class:`~repro.serverless.faults.FaultPlan` or a path
         to its JSON) chaos-tests the run; ``tolerance``
         (:class:`~repro.serverless.faults.FaultTolerance`) configures the
-        engine's retry/checkpoint/restart recovery."""
+        engine's retry/checkpoint/restart recovery.  ``payload_true`` /
+        ``throttle`` calibrate the process backend's byte and time axes
+        (real payload sizes, modeled-bandwidth transfer sleeps); they
+        require ``backend="process"``."""
         from repro.serverless.runtime import run_plan
 
+        if payload_true or throttle:
+            from repro.serverless.backends import ProcessBackend, get_backend
+
+            backend = get_backend(backend)
+            if not isinstance(backend, ProcessBackend):
+                raise ValueError(
+                    "payload_true/throttle need the process backend (real "
+                    "payloads moving through a real store); pass "
+                    "backend='process'")
+            backend.payload_true = bool(payload_true)
+            backend.throttle = bool(throttle)
         rp = self.resolve(**resolve_kw)
         return run_plan(rp.profile, rp.platform, rp.config,
                         rp.total_micro_batches, steps=steps,

@@ -221,16 +221,20 @@ class Session:
 
     def emulate(self, *, steps: int = 1, execution=None,
                 backend="emulated", trace: bool = False,
-                faults=None, tolerance=None) -> "Session":
+                faults=None, tolerance=None, payload_true: bool = False,
+                throttle: bool = False) -> "Session":
         """Execute the plan through the storage-backed runtime engine on the
-        chosen execution backend (``"emulated"``, ``"local"``, or an
+        chosen execution backend (``"emulated"``, ``"local"``,
+        ``"process"``, or an
         :class:`~repro.serverless.backends.ExecutionBackend` instance).
         ``trace=True`` records per-worker spans (``engine_result.trace``);
         ``faults``/``tolerance`` chaos-test the run and configure recovery
-        (see :mod:`repro.serverless.faults`)."""
+        (see :mod:`repro.serverless.faults`); ``payload_true``/``throttle``
+        calibrate the process backend's byte and time axes."""
         self.engine_result = self._require_plan().emulate(
             steps=steps, contention=self.contention, execution=execution,
             backend=backend, trace=trace, faults=faults, tolerance=tolerance,
+            payload_true=payload_true, throttle=throttle,
             profile=self._merged_profile(), platform=self.platform)
         return self
 

@@ -367,6 +367,19 @@ def _cmd_emulate(args) -> int:
 
     with _operator_errors():        # unknown backend name lists the registry
         backend = get_backend(args.backend)
+    throttle = bool(args.throttle or args.bandwidth is not None)
+    if args.payload_true or throttle:
+        from repro.serverless.backends import ProcessBackend
+
+        if not isinstance(backend, ProcessBackend):
+            raise SystemExit(
+                "error: --payload-true/--throttle/--bandwidth need the "
+                "process backend (real payloads moving through a real "
+                "store); pass --backend process")
+        backend.payload_true = bool(args.payload_true)
+        backend.throttle = throttle
+        if args.bandwidth is not None:
+            backend.bandwidth = args.bandwidth
     res = run_plan(rp.profile, rp.platform, rp.config,
                    rp.total_micro_batches, steps=args.steps,
                    pipelined_sync=rp.pipelined_sync,
@@ -667,10 +680,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     # hardcoded choices=) so register_backend'ed third-party names work here
     p.add_argument("--backend", default="emulated", metavar="NAME",
                    help="execution backend: emulated (virtual-clock cost "
-                        "model, default), local (real concurrent workers, "
-                        "host wall-clock), aws/oss (real-platform stubs), "
-                        "or any registered backend name; the same plan JSON "
-                        "drives any of them")
+                        "model, default), local (real concurrent worker "
+                        "threads, host wall-clock), process (real OS worker "
+                        "processes over a file store), aws (real S3 object "
+                        "store, needs boto3), oss (stub), or any registered "
+                        "backend name; the same plan JSON drives any of them")
     p.add_argument("--steps", type=int, default=2)
     p.add_argument("-o", "--out", default=None,
                    help="also save the executed plan JSON here")
@@ -684,6 +698,19 @@ def main(argv: Optional[List[str]] = None) -> int:
                    help="record per-worker spans and write a Chrome/Perfetto "
                         "trace with the simulator's predicted timeline "
                         "attached (see `repro inspect`)")
+    p.add_argument("--payload-true", action="store_true",
+                   help="charge store transfers their real payload sizes "
+                        "(np nbytes) instead of the modeled ones; process "
+                        "backend only")
+    p.add_argument("--throttle", action="store_true",
+                   help="sleep each store transfer for nbytes/bandwidth + "
+                        "latency per the platform profile, giving traces a "
+                        "calibrated wall-clock time axis; process backend "
+                        "only")
+    p.add_argument("--bandwidth", type=float, default=None, metavar="BYTES_S",
+                   help="override the per-worker throttle bandwidth in "
+                        "bytes/s (default: the plan's modeled per-worker "
+                        "store bandwidth); implies --throttle")
     p.add_argument("--fault-plan", default=None, metavar="PLAN.json",
                    help="chaos-test the run: inject faults from a saved "
                         "FaultPlan JSON; recovery must reproduce the "

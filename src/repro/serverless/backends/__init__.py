@@ -21,7 +21,7 @@ Third-party backends register with :func:`register_backend`.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Union
+from typing import Callable, Dict, Optional, Union
 
 from repro.serverless.backends.base import (  # noqa: F401
     ExecutionBackend,
@@ -42,6 +42,10 @@ from repro.serverless.backends.local import (  # noqa: F401
     LocalStore,
     LocalWorkerContext,
 )
+from repro.serverless.backends.process import (  # noqa: F401
+    ProcessBackend,
+    ProcessWorkerHandle,
+)
 
 _REGISTRY: Dict[str, Callable[[], ExecutionBackend]] = {}
 
@@ -58,6 +62,38 @@ def available_backends() -> tuple:
     return tuple(sorted(_REGISTRY))
 
 
+def _availability_of(name: str) -> Optional[str]:
+    """None when backend ``name`` should work on this host; otherwise a short
+    reason it will fail at open (missing client lib, no POSIX locks, ...)."""
+    import importlib.util
+    import os
+
+    if name == "process":
+        if os.name != "posix":
+            return "needs POSIX file locks + signals"
+        if importlib.util.find_spec("fcntl") is None:  # pragma: no cover
+            return "fcntl module missing"
+        return None
+    client = {"aws": "boto3", "oss": "oss2"}.get(name)
+    if client is not None and importlib.util.find_spec(client) is None:
+        return f"{client} not installed"
+    return None
+
+
+def backend_availability() -> Dict[str, Optional[str]]:
+    """Registered backend name -> None (available on this host) or a short
+    reason it is not (used by backend-selection error messages and the CLI's
+    ``--backend`` help)."""
+    return {name: _availability_of(name) for name in available_backends()}
+
+
+def _describe_backends() -> str:
+    parts = []
+    for name, why in backend_availability().items():
+        parts.append(name if why is None else f"{name} (unavailable: {why})")
+    return ", ".join(parts)
+
+
 def get_backend(spec: Union[str, ExecutionBackend]) -> ExecutionBackend:
     """Resolve a backend: an instance passes through (pre-configured
     backends, e.g. ``LocalBackend(fs_root=...)``); a name constructs a fresh
@@ -69,11 +105,12 @@ def get_backend(spec: Union[str, ExecutionBackend]) -> ExecutionBackend:
     except (KeyError, TypeError):
         raise KeyError(
             f"unknown execution backend {spec!r}; available: "
-            f"{', '.join(available_backends())}") from None
+            f"{_describe_backends()}") from None
     return factory()
 
 
 register_backend("emulated", EmulatedBackend)
 register_backend("local", LocalBackend)
+register_backend("process", ProcessBackend)
 register_backend("aws", AwsS3Backend)
 register_backend("oss", AliyunOssBackend)

@@ -128,6 +128,34 @@ class ExecutionBackend(ABC):
     #: optional ``repro.obs.SpanRecorder`` installed before ``open()``;
     #: tracing-capable backends emit one Span per resource task into it
     recorder = None
+    #: True when the backend *hosts* the worker programs itself (each worker
+    #: runs ``engine._worker_step_program`` in its own OS process/container
+    #: rather than receiving a generator from the engine).  The engine then
+    #: calls ``bind_run``/``stage_step``/``worker_handles`` instead of
+    #: building workers and generators in-process — generators cannot cross
+    #: a process boundary.
+    hosts_programs: bool = False
+
+    def bind_run(self, **kw) -> None:
+        """Program-hosting hook: receive the run's execution spec before
+        ``open()`` (``execution=``, ``config=``, ``tolerance=``, ``report=``
+        and, when fault injection is active, ``injector=``).  Backends with
+        ``hosts_programs=False`` ignore it."""
+
+    def stage_step(self, k: int, *, batch=None, losses=None) -> None:
+        """Program-hosting hook: called right before ``run_step(k, ...)``
+        with the step's evaluated batch (``Execution.batch_fn`` closures are
+        not picklable, so the engine evaluates and the backend ships) and
+        the mutable ``losses`` dict the hosted programs must fill.  No-op
+        for backends that run engine-built generators."""
+
+    def worker_handles(self):
+        """Program-hosting hook: the ``S x d`` grid of stage-worker proxies
+        (each exposing ``.params``/``.span``/``export_state``/``load_state``
+        like ``runtime.worker.StageWorker``) in place of the engine's own
+        ``make_workers()``.  Only meaningful when ``hosts_programs``."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not host worker programs")
 
     def attach_recorder(self, recorder) -> None:
         """Install a span recorder (``repro.obs.SpanRecorder``) for the next

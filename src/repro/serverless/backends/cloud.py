@@ -1,32 +1,55 @@
-"""Real-platform backend stubs: AWS Lambda + S3 and Alibaba FC + OSS.
+"""Real-platform backends: AWS Lambda + S3 (boto3 adapter) and Alibaba
+FC + OSS (stub).
 
 The :class:`ExecutionBackend` contract is everything a real platform needs
-to implement — an object-store client (`put`/`get`/`delete` with the
+to implement — an object-store client (``put``/``get``/``delete`` with the
 platform's visibility semantics) plus a function-invocation surface for the
-``S x d`` stage workers.  The clients themselves (``boto3`` / ``oss2``) are
-not vendored here; these stubs register the names, carry the real config
-surface (:class:`CloudConfig` — bucket, region, timeouts, credential env
-vars, and the same :class:`~repro.serverless.faults.RetryPolicy` the fault-
-tolerance layer uses), and fail *at open time* with an actionable message,
-so ``get_backend("aws")`` is a valid call today and a drop-in implementation
-tomorrow — no solver, driver or CLI change needed when the real clients
-land.
+``S x d`` stage workers.
 
-The fault layer is the acceptance harness for those adapters: a real S3/OSS
-run faces exactly the transient-error/crash/lifetime behaviors
-``FaultInjector`` injects locally, and the adapters inherit the engine's
-recovery machinery (retries per ``CloudConfig.retry``, checkpoint/restart
-via the Function Manager) for free.
+The ``aws`` backend is a *real adapter* now: :class:`S3ObjectStore` speaks
+the boto3 S3 client surface (``put_object``/``get_object``/``delete_object``
+/``list_objects_v2``) behind the same blocking-visibility API as
+:class:`~repro.serverless.backends.local.LocalStore`, with transient S3
+error codes (SlowDown, InternalError, ...) retried per the
+:class:`CloudConfig`'s :class:`~repro.serverless.retry.RetryPolicy`, and
+:class:`AwsS3Backend` subclasses :class:`LocalBackend` so the stage workers
+run concurrently on this host while every object crosses S3.  ``boto3`` is
+*not* vendored: when it is missing (or credentials/bucket are not
+configured) ``open()`` raises :class:`BackendUnavailableError` naming
+exactly what to install or set.  The adapter is unit-tested against an
+in-memory fake S3 client (``tests/test_cloud_s3.py``), so its correctness
+does not depend on the package being installed.
+
+``oss`` remains a stub carrying the real config surface; the fault layer is
+the acceptance harness for both: a real S3/OSS run faces exactly the
+transient-error/crash/lifetime behaviors ``FaultInjector`` injects locally,
+and the adapters inherit the engine's recovery machinery (retries per
+``CloudConfig.retry``, checkpoint/restart via the Function Manager).
 """
 from __future__ import annotations
 
 import importlib.util
 import os
+import pickle
+import threading
+import time
 from dataclasses import dataclass
-from typing import Optional, Tuple
+from typing import Any, Optional, Tuple
 
 from repro.serverless.backends.base import ExecutionBackend
+from repro.serverless.backends.local import (
+    DEFAULT_GET_TIMEOUT,
+    DEFAULT_LEASE_TIMEOUT,
+    LocalBackend,
+)
 from repro.serverless.retry import RetryPolicy
+from repro.serverless.runtime.store import (
+    ProducerDeadError,
+    StoreAbortedError,
+    StoreStats,
+    producer_of_key,
+    producer_worker_of_key,
+)
 
 
 @dataclass(frozen=True)
@@ -67,12 +90,325 @@ OSS_CLOUD_CONFIG = CloudConfig(
 
 
 class BackendUnavailableError(NotImplementedError):
-    """A registered backend name whose implementation is not present in this
-    environment (cloud stubs).  Subclasses NotImplementedError so generic
-    callers still recognize it, while the CLI can catch this type alone
-    without masking genuine NotImplementedError bugs."""
+    """A registered backend name whose implementation cannot run in this
+    environment (missing client library, credentials, or bucket — or a
+    cloud stub).  Subclasses NotImplementedError so generic callers still
+    recognize it, while the CLI can catch this type alone without masking
+    genuine NotImplementedError bugs."""
 
 
+# ---------------------------------------------------------------- S3 adapter
+#: S3 error codes that mean "retry me" (throttles and 5xx), per the S3 API
+#: reference — the same class of failure FaultInjector's TransientStoreError
+#: models locally
+RETRYABLE_S3_CODES = frozenset({
+    "SlowDown", "InternalError", "ServiceUnavailable", "RequestTimeout",
+    "ThrottlingException", "Throttling", "503", "500",
+})
+
+#: codes that mean "the object is not there (yet)" — the blocking-visibility
+#: poll keeps waiting instead of failing
+_MISSING_CODES = frozenset({"NoSuchKey", "404", "NotFound"})
+
+
+def _s3_error_code(exc: BaseException) -> str:
+    """The S3 error code off a botocore ``ClientError`` (or anything
+    shaped like one), without importing botocore."""
+    response = getattr(exc, "response", None)
+    if isinstance(response, dict):
+        return str(response.get("Error", {}).get("Code", ""))
+    return ""
+
+
+class S3ObjectStore:
+    """Blocking-visibility object store over a boto3-shaped S3 client.
+
+    API-compatible with :class:`~repro.serverless.backends.local.LocalStore`
+    (put/get/take/delete/keys, heartbeats/leases, abort/revive, ``stats``/
+    ``live_bytes``), so ``LocalWorkerContext`` and ``local_scatter_reduce``
+    drive it unchanged.  Visibility is real: ``get`` polls ``get_object``
+    until the key exists (S3 gives read-after-write consistency, so one
+    successful poll is authoritative).  Worker liveness stays in-process
+    (the workers are this host's threads); only the *objects* cross S3.
+
+    ``client`` is anything exposing ``put_object``/``get_object``/
+    ``delete_object``/``list_objects_v2`` with boto3's call/return shapes —
+    the real boto3 client, or a fake in tests.  Transient S3 error codes
+    are retried with ``config.retry``'s deterministic backoff; retries are
+    counted in ``retried_ops`` for observability.
+    """
+
+    def __init__(self, client: Any, config: CloudConfig,
+                 timeout: float = DEFAULT_GET_TIMEOUT,
+                 lease_timeout: float = DEFAULT_LEASE_TIMEOUT):
+        if not config.bucket:
+            raise ValueError(
+                "S3ObjectStore needs CloudConfig.bucket (the S3 bucket "
+                "objects live in)")
+        self.client = client
+        self.config = config
+        self.bucket = config.bucket
+        self.prefix = config.key_prefix
+        self.timeout = timeout
+        self.lease_timeout = lease_timeout
+        self.stats = StoreStats()
+        self.retried_ops = 0
+        self._lock = threading.Lock()
+        self._live_bytes = 0.0
+        self._sizes: dict = {}          # key -> charged nbytes (accounting)
+        self._poison: Optional[BaseException] = None
+        self._heartbeats: dict = {}
+        self._dead: set = set()
+
+    # ------------------------------------------------------------- transport
+    def _s3(self, op: str, **kw):
+        """One S3 call with the config's retry policy on transient codes."""
+        attempt = 1
+        policy = self.config.retry
+        while True:
+            try:
+                return getattr(self.client, op)(**kw)
+            except Exception as e:      # noqa: BLE001 - classified by code
+                code = _s3_error_code(e)
+                if code in _MISSING_CODES:
+                    raise
+                if (code in RETRYABLE_S3_CODES
+                        and attempt < policy.max_attempts):
+                    with self._lock:
+                        self.retried_ops += 1
+                    time.sleep(policy.delay(attempt, kw.get("Key", op)))
+                    attempt += 1
+                    continue
+                raise
+
+    def _skey(self, key: str) -> str:
+        return f"{self.prefix}{key}"
+
+    def _get_blob(self, key: str) -> Optional[bytes]:
+        try:
+            resp = self._s3("get_object", Bucket=self.bucket,
+                            Key=self._skey(key))
+        except Exception as e:          # noqa: BLE001 - classified by code
+            if _s3_error_code(e) in _MISSING_CODES:
+                return None
+            raise
+        return resp["Body"].read()
+
+    # ------------------------------------------------------ liveness / leases
+    def heartbeat(self, worker: Tuple[int, int]) -> None:
+        with self._lock:
+            self._heartbeats[worker] = time.monotonic()
+
+    def mark_dead(self, worker: Tuple[int, int]) -> None:
+        with self._lock:
+            self._dead.add(worker)
+
+    def heartbeat_age(self, worker: Tuple[int, int]) -> Optional[float]:
+        with self._lock:
+            beat = self._heartbeats.get(worker)
+        return None if beat is None else time.monotonic() - beat
+
+    def abort(self, reason: BaseException) -> None:
+        with self._lock:
+            if self._poison is None:
+                self._poison = reason
+
+    def revive(self) -> None:
+        with self._lock:
+            self._poison = None
+            self._dead.clear()
+            self._heartbeats.clear()
+
+    # -------------------------------------------------------------- store API
+    def put(self, key: str, nbytes: float, value: Any = None) -> None:
+        blob = pickle.dumps((float(nbytes), value),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+        self._s3("put_object", Bucket=self.bucket, Key=self._skey(key),
+                 Body=blob)
+        with self._lock:
+            prev = self._sizes.pop(key, None)
+            if prev is not None:
+                # overwrite frees the old object: count the implicit delete
+                self._live_bytes -= prev
+                self.stats.count_delete(key, prev)
+            self._sizes[key] = float(nbytes)
+            self._live_bytes += float(nbytes)
+            self.stats.count_put(key, float(nbytes), self._live_bytes)
+
+    def _check_liveness(self, key: str) -> None:
+        with self._lock:
+            poison = self._poison
+            producer = producer_worker_of_key(key)
+            dead = producer in self._dead
+            beat = self._heartbeats.get(producer)
+        if poison is not None:
+            raise StoreAbortedError(
+                f"store aborted while waiting for {key!r}: "
+                f"{poison}") from poison
+        if producer is None:
+            return
+        if dead:
+            raise ProducerDeadError(
+                f"object {key!r} will never arrive: its producer worker "
+                f"(stage {producer[0]}, replica {producer[1]}) died")
+        if beat is not None and time.monotonic() - beat > self.lease_timeout:
+            age = time.monotonic() - beat
+            raise ProducerDeadError(
+                f"object {key!r} will never arrive: its producer worker "
+                f"(stage {producer[0]}, replica {producer[1]}) stopped "
+                f"heartbeating {age:.1f}s ago (lease timeout "
+                f"{self.lease_timeout:.0f}s)")
+
+    def _fetch(self, key: str, consume: bool, return_nbytes: bool) -> Any:
+        deadline = time.monotonic() + self.timeout
+        while True:
+            self._check_liveness(key)
+            blob = self._get_blob(key)
+            if blob is not None:
+                break
+            if time.monotonic() > deadline:
+                raise TimeoutError(self._diagnose_timeout(key))
+            time.sleep(min(0.01, self.lease_timeout / 4.0))
+        nbytes, value = pickle.loads(blob)
+        with self._lock:
+            self.stats.count_get(key, nbytes)
+        if consume:
+            self._s3("delete_object", Bucket=self.bucket,
+                     Key=self._skey(key))
+            with self._lock:
+                self._sizes.pop(key, None)
+                self._live_bytes -= nbytes
+                self.stats.count_delete(key, nbytes)
+        return (value, nbytes) if return_nbytes else value
+
+    def _diagnose_timeout(self, key: str) -> str:
+        producer = producer_worker_of_key(key)
+        existing = sorted(self._sizes)
+        sample = ", ".join(existing[:8]) if existing else "none"
+        if producer is None:
+            lease = f"no producer lease on record ({producer_of_key(key)})"
+        else:
+            age = self.heartbeat_age(producer)
+            state = ("marked dead" if producer in self._dead
+                     else f"last heartbeat {age:.1f}s ago" if age is not None
+                     else "never heartbeat")
+            lease = (f"producer lease held by worker (stage {producer[0]}, "
+                     f"replica {producer[1]}) — {state}")
+        return (f"object {key!r} never became visible within "
+                f"{self.timeout:.0f}s; {lease}; "
+                f"{len(existing)} keys tracked (e.g. [{sample}])")
+
+    def get(self, key: str, return_nbytes: bool = False) -> Any:
+        return self._fetch(key, consume=False, return_nbytes=return_nbytes)
+
+    def take(self, key: str, return_nbytes: bool = False) -> Any:
+        return self._fetch(key, consume=True, return_nbytes=return_nbytes)
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            nbytes = self._sizes.pop(key, None)
+        if nbytes is None:
+            return
+        self._s3("delete_object", Bucket=self.bucket, Key=self._skey(key))
+        with self._lock:
+            self._live_bytes -= nbytes
+            self.stats.count_delete(key, nbytes)
+
+    def keys(self):
+        out = []
+        kw = dict(Bucket=self.bucket, Prefix=self.prefix)
+        while True:
+            resp = self._s3("list_objects_v2", **kw)
+            for obj in resp.get("Contents", ()) or ():
+                out.append(obj["Key"][len(self.prefix):])
+            if not resp.get("IsTruncated"):
+                return out
+            kw["ContinuationToken"] = resp["NextContinuationToken"]
+
+    def __contains__(self, key: str) -> bool:
+        with self._lock:
+            return key in self._sizes
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._sizes)
+
+    @property
+    def live_bytes(self) -> float:
+        with self._lock:
+            return self._live_bytes
+
+
+class AwsS3Backend(LocalBackend):
+    """AWS Lambda workers synchronizing through S3 (paper §5.1 setup).
+
+    The store is *real* (every object round-trips through the configured S3
+    bucket via boto3, with ``CloudConfig.retry`` on transient codes); the
+    compute side runs the stage workers as this host's threads — the
+    Lambda-invocation surface is the remaining gap to the full platform.
+    ``open()`` fails with an actionable :class:`BackendUnavailableError`
+    when boto3, credentials, or the bucket are missing.  Tests inject a
+    fake boto3-shaped ``client`` to exercise the adapter hermetically.
+    """
+
+    name = "aws"
+    client_module = "boto3"
+    platform_blurb = "AWS Lambda + S3"
+    extra = "aws"
+    default_config = AWS_CLOUD_CONFIG
+
+    def __init__(self, config: Optional[CloudConfig] = None, *,
+                 client: Any = None,
+                 get_timeout: float = DEFAULT_GET_TIMEOUT,
+                 lease_timeout: float = DEFAULT_LEASE_TIMEOUT):
+        super().__init__(get_timeout=get_timeout,
+                         lease_timeout=lease_timeout)
+        self.config = config if config is not None else self.default_config
+        self._client = client
+
+    def _make_client(self) -> Any:
+        if self._client is not None:
+            return self._client
+        if importlib.util.find_spec(self.client_module) is None:
+            raise BackendUnavailableError(
+                f"backend {self.name!r} ({self.platform_blurb}) requires "
+                f"the {self.client_module!r} client — `pip install "
+                f"repro[{self.extra}]` (or `pip install "
+                f"{self.client_module}`) to pull it in.  Replay the plan on "
+                "'emulated', 'local', or 'process' instead; the same "
+                "DeploymentPlan JSON drives this backend unchanged once "
+                "the client is installed.")
+        missing = self.config.missing_credentials()
+        if missing:
+            raise BackendUnavailableError(
+                f"backend {self.name!r}: {self.client_module} is installed "
+                f"but credentials are missing — set {', '.join(missing)} "
+                "before opening this backend.")
+        if not self.config.bucket:
+            raise BackendUnavailableError(
+                f"backend {self.name!r}: no S3 bucket configured — pass "
+                "CloudConfig(bucket=...) to AwsS3Backend (objects need a "
+                "bucket to live in).")
+        import boto3
+
+        return boto3.client(
+            "s3", region_name=self.config.region,
+            endpoint_url=self.config.endpoint)
+
+    def open(self, agg) -> None:
+        # resolve the client first: a missing boto3/credentials/bucket must
+        # surface as the actionable BackendUnavailableError, not whatever
+        # provisioning trips over afterwards
+        self._client = self._make_client()
+        super().open(agg)
+
+    def _make_store(self) -> S3ObjectStore:
+        return S3ObjectStore(self._make_client(), self.config,
+                             timeout=self.get_timeout,
+                             lease_timeout=self.lease_timeout)
+
+
+# -------------------------------------------------------------------- stubs
 class _CloudStub(ExecutionBackend):
     """Shared stub behavior: name the missing client, fail on open()."""
 
@@ -105,9 +441,10 @@ class _CloudStub(ExecutionBackend):
         return BackendUnavailableError(
             f"backend {self.name!r} ({self.platform_blurb}) is a stub: "
             f"{detail}.{cred}  Replay the plan on 'emulated' (virtual-clock "
-            "cost model) or 'local' (real concurrency on this host) "
-            "instead; the same DeploymentPlan JSON will drive the real "
-            "backend unchanged once it lands.")
+            "cost model), 'local' (real concurrency on this host), or "
+            "'process' (real worker processes) instead; the same "
+            "DeploymentPlan JSON will drive the real backend unchanged "
+            "once it lands.")
 
     def open(self, agg) -> None:
         raise self._unavailable()
@@ -124,16 +461,6 @@ class _CloudStub(ExecutionBackend):
 
     def _store_for_verification(self):  # pragma: no cover
         raise self._unavailable()
-
-
-class AwsS3Backend(_CloudStub):
-    """AWS Lambda workers synchronizing through S3 (paper §5.1 setup)."""
-
-    name = "aws"
-    client_module = "boto3"
-    platform_blurb = "AWS Lambda + S3"
-    extra = "aws"
-    default_config = AWS_CLOUD_CONFIG
 
 
 class AliyunOssBackend(_CloudStub):

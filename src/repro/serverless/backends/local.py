@@ -416,12 +416,16 @@ class LocalBackend(ExecutionBackend):
                 f"workers; the local backend caps at {MAX_WORKERS} threads "
                 "— replay this plan on the emulated backend instead")
         self.agg = agg
-        self.store = LocalStore(timeout=self.get_timeout,
-                                fs_root=self.fs_root,
-                                lease_timeout=self.lease_timeout)
+        self.store = self._make_store()
         self._tracers = {}
         self._steps_done = 0
         self._t0 = time.perf_counter()
+
+    def _make_store(self) -> LocalStore:
+        """Store-provisioning hook: cloud adapters subclass this backend and
+        swap in a client-backed store with the same blocking surface."""
+        return LocalStore(timeout=self.get_timeout, fs_root=self.fs_root,
+                          lease_timeout=self.lease_timeout)
 
     def recover(self) -> int:
         """Revive the poisoned store and purge residual non-checkpoint keys

@@ -450,6 +450,22 @@ class FaultInjector(ExecutionBackend):
         return self.plan.lifetime_steps
 
     # ------------------------------------------------------------ delegation
+    @property
+    def hosts_programs(self) -> bool:  # type: ignore[override]
+        return bool(getattr(self.inner, "hosts_programs", False))
+
+    def bind_run(self, **kw) -> None:
+        """Program-hosting backends get the injector itself: they ship the
+        plan's events to their worker processes and merge the consumed state
+        back into ``self.state`` (the authoritative once-only schedule)."""
+        self.inner.bind_run(**kw, injector=self)
+
+    def stage_step(self, k: int, *, batch=None, losses=None) -> None:
+        self.inner.stage_step(k, batch=batch, losses=losses)
+
+    def worker_handles(self):
+        return self.inner.worker_handles()
+
     def attach_recorder(self, recorder) -> None:
         self.inner.attach_recorder(recorder)
 

@@ -263,7 +263,18 @@ def run_plan(
         recorder = SpanRecorder()
         be.attach_recorder(recorder)
 
+    # program-hosting backends (process, real platforms) run the worker
+    # programs *inside* their own workers: generators cannot cross a process
+    # boundary, so the engine ships the run's execution spec up front and
+    # receives RPC worker proxies instead of building StageWorkers in-process
+    hosts = bool(getattr(be, "hosts_programs", False))
+    if hosts:
+        be.bind_run(execution=execution, config=config, tolerance=tol,
+                    report=report)
+
     def make_workers():
+        if hosts:
+            return be.worker_handles()
         from repro.serverless.runtime.worker import (
             StageWorker,
             stage_instance_ranges,
@@ -276,9 +287,8 @@ def run_plan(
                              jit=execution.jit, remat=execution.remat)
                  for r in range(d)] for s in range(S)]
 
-    workers = make_workers() if execution is not None else None
-
     be.open(agg)
+    workers = make_workers() if execution is not None else None
     metrics_by_step: Dict[int, Dict[str, float]] = {}
     iter_ends: Dict[int, float] = {}
     sync_durations: Dict[int, float] = {}
@@ -360,6 +370,8 @@ def run_plan(
                 batch = (execution.batch_fn(k)
                          if execution is not None else None)
                 losses: Dict = {}
+                if hosts:
+                    be.stage_step(k, batch=batch, losses=losses)
                 programs = {
                     (s, r): _worker_step_program(
                         mk_ctx(s, r), k=k, s=s, r=r, agg=agg,
@@ -409,6 +421,14 @@ def run_plan(
             be.delete(f"ckpt/s{s}")
         be.verify_drained()
         stats = be.store_stats
+        # assemble before close(): program-hosting backends read final
+        # params out of their worker processes, which close() tears down
+        params = None
+        if workers is not None:
+            from repro.serverless.runtime.worker import assemble_params
+
+            params = assemble_params(execution.cfg,
+                                     [workers[s][0] for s in range(S)])
     finally:
         be.close()
     metrics = [metrics_by_step[i] for i in sorted(metrics_by_step)]
@@ -419,12 +439,6 @@ def run_plan(
     cost = platform.price_per_gb_s * (mem_total / GB) * t_iter
     comp = float(agg.t_fc.sum() + agg.t_bc.sum())
     sync_t = float(np.mean([sync_durations[i] for i in sorted(sync_durations)]))
-    params = None
-    if workers is not None:
-        from repro.serverless.runtime.worker import assemble_params
-
-        params = assemble_params(execution.cfg, [workers[s][0] for s in range(S)])
-
     trace_obj = None
     if recorder is not None:
         from repro.obs import Trace

@@ -1,7 +1,8 @@
-"""Execution-backend API: registry semantics, emulated/local parity (store
-traffic, byte conservation, and bit-identical K-step training under real
-thread concurrency), the wall-clock LocalStore's blocking visibility, and
-the saved-plan -> ``emulate --backend local`` CLI round trip."""
+"""Execution-backend API: registry semantics, emulated/local/process parity
+(store traffic, byte conservation, and bit-identical K-step training under
+real thread *and* real process concurrency), the wall-clock LocalStore's
+blocking visibility, and the saved-plan -> ``emulate --backend local`` CLI
+round trip."""
 import dataclasses
 import threading
 import time
@@ -31,7 +32,8 @@ jax = pytest.importorskip("jax")
 
 # ----------------------------------------------------------------- registry
 def test_registry_resolves_names_and_instances():
-    assert {"emulated", "local", "aws", "oss"} <= set(available_backends())
+    assert {"emulated", "local", "process", "aws",
+            "oss"} <= set(available_backends())
     be = get_backend("emulated")
     assert isinstance(be, EmulatedBackend) and not be.wall_clock
     lo = get_backend("local")
@@ -57,12 +59,23 @@ def test_registry_resolves_names_and_instances():
         _b._REGISTRY.pop("custom-test", None)
 
 
-def test_cloud_stubs_fail_actionably():
-    for name in ("aws", "oss"):
-        be = get_backend(name)
-        assert isinstance(be, ExecutionBackend) and be.wall_clock
-        with pytest.raises(NotImplementedError, match="stub"):
-            be.open(None)
+def test_cloud_backends_fail_actionably():
+    # oss is still a stub; aws is a real adapter (tested hermetically in
+    # test_cloud_s3.py) whose open() names the missing boto3 client
+    be = get_backend("oss")
+    assert isinstance(be, ExecutionBackend) and be.wall_clock
+    with pytest.raises(NotImplementedError, match="stub"):
+        be.open(None)
+
+    import importlib.util
+
+    if importlib.util.find_spec("boto3") is None:
+        from repro.serverless.backends.cloud import BackendUnavailableError
+
+        aws = get_backend("aws")
+        assert isinstance(aws, ExecutionBackend) and aws.wall_clock
+        with pytest.raises(BackendUnavailableError, match="boto3"):
+            aws.open(None)
 
 
 # --------------------------------------------------------------- LocalStore
@@ -111,24 +124,29 @@ def _timing_plan(d=4):
 
 @pytest.mark.parametrize("pipelined", [True, False])
 def test_store_traffic_identical_across_backends(pipelined):
-    """Both backends move the same objects: identical put/get/delete counts
-    and (modeled) byte totals for the same plan, conserved and drained."""
+    """All backends move the same objects: identical put/get/delete counts
+    and (modeled) byte totals for the same plan, conserved and drained —
+    threads over dicts, and real OS processes over the file store."""
     prof, cfg = _timing_plan()
     res = {}
-    for name in ("emulated", "local"):
+    for name in ("emulated", "local", "process"):
         res[name] = run_plan(prof, AWS_LAMBDA, cfg, 32, steps=2,
                              pipelined_sync=pipelined, backend=name)
-    se, sl = res["emulated"].store_stats, res["local"].store_stats
-    assert (se.puts, se.gets, se.deletes) == (sl.puts, sl.gets, sl.deletes)
-    assert sl.bytes_in == pytest.approx(se.bytes_in)
-    assert sl.bytes_out == pytest.approx(se.bytes_out)
+    se = res["emulated"].store_stats
+    for name in ("local", "process"):
+        st = res[name].store_stats
+        assert (se.puts, se.gets, se.deletes) == \
+            (st.puts, st.gets, st.deletes), name
+        assert st.bytes_in == pytest.approx(se.bytes_in)
+        assert st.bytes_out == pytest.approx(se.bytes_out)
     # conservation (run_plan itself verifies drainage; double-check stats)
-    for st in (se, sl):
+    for name, r in res.items():
+        st = r.store_stats
         assert st.puts == st.deletes
         assert st.bytes_deleted == pytest.approx(st.bytes_in)
-    assert not res["emulated"].wall_clock and res["local"].wall_clock
-    assert res["emulated"].backend == "emulated"
-    assert res["local"].backend == "local"
+        assert r.backend == name
+    assert not res["emulated"].wall_clock
+    assert res["local"].wall_clock and res["process"].wall_clock
 
 
 def test_store_drain_check_catches_leaks():
@@ -199,18 +217,20 @@ def _assert_bit_identical(a_tree, b_tree):
                          ids=["eq2-pipelined", "eq1-three-phase"])
 def test_numeric_params_bit_identical_across_backends(pipelined):
     """Acceptance: K trained steps on the local backend — real concurrent
-    stage workers, real store races — produce params *bit-identical* to the
-    emulated virtual-clock run, for both collective schedules, and both
-    track the monolithic fp32 loop."""
+    stage workers, real store races — and on the process backend — real OS
+    processes training through the file store — produce params
+    *bit-identical* to the emulated virtual-clock run, for both collective
+    schedules, and all track the monolithic fp32 loop."""
     cfg, prof, config, params0, optimizer, batches, mk_exec = _numeric_setup()
     steps = len(batches)
     res = {}
-    for name in ("emulated", "local"):
+    for name in ("emulated", "local", "process"):
         res[name] = run_plan(prof, AWS_LAMBDA, config, total_micro_batches=4,
                              steps=steps, pipelined_sync=pipelined,
                              execution=mk_exec(), backend=name)
-    _assert_bit_identical(res["emulated"].params, res["local"].params)
-    assert res["emulated"].losses == res["local"].losses
+    for name in ("local", "process"):
+        _assert_bit_identical(res["emulated"].params, res[name].params)
+        assert res["emulated"].losses == res[name].losses, name
 
     ref_params, ref_losses = _reference_loop(cfg, params0, batches, optimizer,
                                              steps)
@@ -293,3 +313,9 @@ def test_cli_saved_plan_replays_on_both_backends(tmp_path, capsys):
     # the stubs name the missing client instead of crashing
     with pytest.raises(SystemExit, match="boto3"):
         cli_main(["emulate", str(plan_path), "--backend", "aws"])
+    # calibration flags only make sense where real payloads move
+    with pytest.raises(SystemExit, match="process"):
+        cli_main(["emulate", str(plan_path), "--steps", "1", "--throttle"])
+    with pytest.raises(SystemExit, match="process"):
+        cli_main(["emulate", str(plan_path), "--steps", "1",
+                  "--payload-true", "--backend", "local"])

@@ -1,0 +1,235 @@
+"""The boto3 S3 adapter (`backends/cloud.py`), tested hermetically against
+an in-memory fake S3 client: round trips + byte accounting, blocking
+visibility, retry policy on transient S3 codes, paginated key listing,
+lease failover, and an end-to-end `run_plan` traffic-parity check — plus
+the actionable open() failures when boto3/credentials/bucket are absent."""
+import importlib.util
+import io
+import threading
+import time
+
+import pytest
+
+from repro.serverless.backends import get_backend
+from repro.serverless.backends.cloud import (
+    AwsS3Backend,
+    BackendUnavailableError,
+    CloudConfig,
+    S3ObjectStore,
+)
+from repro.serverless.retry import RetryPolicy
+from repro.serverless.runtime.store import (
+    ProducerDeadError,
+    assert_store_drained,
+)
+
+HAVE_BOTO3 = importlib.util.find_spec("boto3") is not None
+
+
+class FakeClientError(Exception):
+    """botocore.exceptions.ClientError look-alike: carries .response."""
+
+    def __init__(self, code, op="GetObject"):
+        super().__init__(f"An error occurred ({code}) when calling {op}")
+        self.response = {"Error": {"Code": code}}
+
+
+class FakeS3Client:
+    """In-memory boto3-S3-shaped client: put/get/delete/list_objects_v2
+    with boto3's call and return shapes, optional scripted failures, and a
+    small list page size so pagination is actually exercised."""
+
+    def __init__(self, page_size=2):
+        self.objects = {}
+        self.page_size = page_size
+        self.calls = []
+        self._fail_queue = []           # (op, code) consumed FIFO
+        self._lock = threading.Lock()
+
+    def fail_next(self, op, code, times=1):
+        with self._lock:
+            self._fail_queue.extend((op, code) for _ in range(times))
+
+    def _maybe_fail(self, op):
+        with self._lock:
+            if self._fail_queue and self._fail_queue[0][0] == op:
+                _, code = self._fail_queue.pop(0)
+                raise FakeClientError(code, op)
+
+    def put_object(self, *, Bucket, Key, Body):
+        self.calls.append(("put", Key))
+        self._maybe_fail("put_object")
+        with self._lock:
+            self.objects[(Bucket, Key)] = bytes(Body)
+        return {}
+
+    def get_object(self, *, Bucket, Key):
+        self.calls.append(("get", Key))
+        self._maybe_fail("get_object")
+        with self._lock:
+            blob = self.objects.get((Bucket, Key))
+        if blob is None:
+            raise FakeClientError("NoSuchKey", "GetObject")
+        return {"Body": io.BytesIO(blob)}
+
+    def delete_object(self, *, Bucket, Key):
+        self.calls.append(("delete", Key))
+        self._maybe_fail("delete_object")
+        with self._lock:
+            self.objects.pop((Bucket, Key), None)
+        return {}
+
+    def list_objects_v2(self, *, Bucket, Prefix, ContinuationToken=None):
+        with self._lock:
+            keys = sorted(k for (b, k) in self.objects
+                          if b == Bucket and k.startswith(Prefix))
+        start = int(ContinuationToken or 0)
+        page = keys[start:start + self.page_size]
+        out = {"Contents": [{"Key": k} for k in page],
+               "IsTruncated": start + self.page_size < len(keys)}
+        if out["IsTruncated"]:
+            out["NextContinuationToken"] = str(start + self.page_size)
+        return out
+
+
+def _store(client=None, **kw):
+    cfg = CloudConfig(bucket="test-bucket", key_prefix="funcpipe/",
+                      retry=RetryPolicy(max_attempts=4, base_delay_s=0.001))
+    return S3ObjectStore(client or FakeS3Client(), cfg, **kw)
+
+
+# ----------------------------------------------------------------- adapter
+def test_round_trip_accounting_and_prefix():
+    client = FakeS3Client()
+    store = _store(client)
+    store.put("k0/r0/m0/act0", 128.0, value={"a": 1})
+    # objects land under the configured key prefix
+    assert ("test-bucket", "funcpipe/k0/r0/m0/act0") in client.objects
+    assert store.live_bytes == 128.0 and "k0/r0/m0/act0" in store
+    value, nb = store.take("k0/r0/m0/act0", return_nbytes=True)
+    assert value == {"a": 1} and nb == 128.0
+    assert len(store) == 0 and store.live_bytes == 0.0
+    assert store.stats.puts == store.stats.deletes == 1
+    assert_store_drained(store)
+
+
+def test_overwrite_counts_implicit_delete():
+    store = _store()
+    store.put("k", 100.0)
+    store.put("k", 40.0)
+    assert store.live_bytes == pytest.approx(40.0)
+    store.delete("k")
+    assert store.stats.puts == store.stats.deletes == 2
+    assert store.stats.bytes_deleted == pytest.approx(store.stats.bytes_in)
+    assert_store_drained(store)
+
+
+def test_keys_paginate_across_list_calls():
+    store = _store(FakeS3Client(page_size=2))
+    want = [f"ckpt/s{i}" for i in range(5)]
+    for k in want:
+        store.put(k, 1.0)
+    assert sorted(store.keys()) == sorted(want)
+
+
+def test_transient_s3_codes_retry_per_policy():
+    client = FakeS3Client()
+    store = _store(client)
+    client.fail_next("put_object", "SlowDown", times=2)
+    store.put("k", 8.0, value="v")          # survives two throttles
+    assert store.retried_ops == 2
+    client.fail_next("get_object", "InternalError", times=1)
+    assert store.take("k") == "v"
+    assert store.retried_ops == 3
+
+
+def test_retry_budget_exhaustion_surfaces_client_error():
+    client = FakeS3Client()
+    store = _store(client)
+    client.fail_next("put_object", "SlowDown", times=10)
+    with pytest.raises(FakeClientError, match="SlowDown"):
+        store.put("k", 8.0)
+
+
+def test_non_retryable_code_raises_immediately():
+    client = FakeS3Client()
+    store = _store(client)
+    client.fail_next("put_object", "AccessDenied")
+    with pytest.raises(FakeClientError, match="AccessDenied"):
+        store.put("k", 8.0)
+    assert store.retried_ops == 0
+
+
+def test_blocking_get_waits_for_visibility():
+    store = _store(timeout=10.0)
+    got = {}
+
+    def consumer():
+        got["v"] = store.take("x")
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.05)
+    assert t.is_alive()
+    store.put("x", 64.0, value="payload")
+    t.join(timeout=10.0)
+    assert got["v"] == "payload"
+
+
+def test_get_timeout_diagnoses_missing_object():
+    store = _store(timeout=0.05)
+    with pytest.raises(TimeoutError, match="never became visible"):
+        store.get("missing")
+
+
+def test_dead_producer_fails_over_before_timeout():
+    store = _store(timeout=30.0)
+    store.mark_dead((0, 0))
+    t0 = time.monotonic()
+    with pytest.raises(ProducerDeadError, match="died"):
+        store.get("k0/r0/m0/act0")      # produced by stage 0, replica 0
+    assert time.monotonic() - t0 < 5.0
+
+
+# ------------------------------------------------------------- end to end
+def test_run_plan_traffic_parity_through_fake_s3():
+    """The aws backend with an injected fake client moves exactly the same
+    objects as the emulated backend, drained and conserved."""
+    from test_backends import _timing_plan
+
+    from repro.serverless.platform import AWS_LAMBDA
+    from repro.serverless.runtime import run_plan
+
+    prof, cfg = _timing_plan(d=2)
+    be = AwsS3Backend(CloudConfig(bucket="test-bucket"),
+                      client=FakeS3Client())
+    aws = run_plan(prof, AWS_LAMBDA, cfg, 32, steps=2, pipelined_sync=True,
+                   backend=be)
+    em = run_plan(prof, AWS_LAMBDA, cfg, 32, steps=2, pipelined_sync=True,
+                  backend="emulated")
+    sa, se = aws.store_stats, em.store_stats
+    assert (sa.puts, sa.gets, sa.deletes) == (se.puts, se.gets, se.deletes)
+    assert sa.bytes_in == pytest.approx(se.bytes_in)
+    assert aws.backend == "aws" and aws.wall_clock
+
+
+# ----------------------------------------------------- unavailability paths
+@pytest.mark.skipif(HAVE_BOTO3, reason="boto3 installed: open() proceeds")
+def test_open_without_boto3_names_the_client():
+    be = get_backend("aws")
+    assert isinstance(be, AwsS3Backend)
+    with pytest.raises(BackendUnavailableError, match="boto3"):
+        be.open(None)
+
+
+@pytest.mark.skipif(not HAVE_BOTO3, reason="needs boto3 for this branch")
+def test_open_without_credentials_names_the_env_vars(monkeypatch):
+    for var in ("AWS_ACCESS_KEY_ID", "AWS_SECRET_ACCESS_KEY"):
+        monkeypatch.delenv(var, raising=False)
+    with pytest.raises(BackendUnavailableError, match="AWS_ACCESS_KEY_ID"):
+        get_backend("aws").open(None)
+
+
+def test_missing_bucket_is_actionable():
+    with pytest.raises(ValueError, match="bucket"):
+        S3ObjectStore(FakeS3Client(), CloudConfig(bucket=""))

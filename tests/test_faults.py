@@ -1,7 +1,8 @@
 """Chaos harness + fault-tolerant engine: FaultPlan determinism and JSON
 round-trips, bit-identical recovery through transients/crashes/lifetime caps
-on both backends and both sync schedules, retry exhaustion, checkpoint wire
-hardening, LocalStore leases/heartbeats, and recovery observability."""
+on all backends (including real SIGKILL'd worker processes on ``process``)
+and both sync schedules, retry exhaustion, checkpoint wire hardening,
+LocalStore leases/heartbeats, and recovery observability."""
 import json
 import os
 import threading
@@ -99,13 +100,14 @@ def _fault_free_params(pipelined):
     return _REFERENCE[pipelined]
 
 
-@pytest.mark.parametrize("backend", ["emulated", "local"])
+@pytest.mark.parametrize("backend", ["emulated", "local", "process"])
 @pytest.mark.parametrize("pipelined", [True, False],
                          ids=["eq2-pipelined", "eq1-three-phase"])
 def test_chaos_run_recovers_bit_identical(backend, pipelined):
     """Training through transients + a crash + a lifetime cap must land on
     exactly the fault-free params — recovery replays from store checkpoints
-    and replayed programs are idempotent over store keys."""
+    and replayed programs are idempotent over store keys.  On the process
+    backend the injected crash SIGKILLs a real OS worker process."""
     _, prof, config, _, _, _, mk_exec = _numeric_setup(steps=3)
     res = run_plan(prof, AWS_LAMBDA, config, 4, steps=3,
                    pipelined_sync=pipelined, execution=mk_exec(),
