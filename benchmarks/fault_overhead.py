@@ -33,6 +33,7 @@ from repro.core.perfmodel import Config
 from repro.core.profiler import paper_model_profile
 from repro.serverless import faults as F
 from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.execution import ExecutionConfig
 from repro.serverless.runtime import run_plan
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -62,8 +63,9 @@ def _chaos_plan(steps):
 def _time_once(*, d, M, steps, faults=None, tolerance=None):
     prof, cfg = _plan(d)
     t0 = time.perf_counter()
-    res = run_plan(prof, AWS_LAMBDA, cfg, M, steps=steps, backend="local",
-                   faults=faults, tolerance=tolerance)
+    res = run_plan(prof, AWS_LAMBDA, cfg, M,
+                   ExecutionConfig(steps=steps, backend="local",
+                                   faults=faults, tolerance=tolerance))
     host = time.perf_counter() - t0
     rep = res.fault_report
     return host / steps, (0 if rep is None else rep.restarts

@@ -53,6 +53,12 @@ def _headline(name: str, rows: list) -> str:
     if name == "fault_overhead":
         gate = [x for x in rows if x["bench"] == "gate"]
         return f"gate_ok={gate[0]['ok']}" if gate else "n/a"
+    if name == "calibration":
+        gate = [x for x in rows if x["bench"] == "gate"]
+        if not gate:
+            return "n/a"
+        return (f"err={gate[0]['baseline']}->{gate[0]['residual']};"
+                f"gate_ok={gate[0]['ok']}")
     return f"rows={len(rows)}"
 
 
@@ -61,6 +67,7 @@ BENCH_NAMES = (
     "scatter_reduce", "overall_perf", "scaling", "coopt", "planner",
     "bandwidth_scaling", "alibaba", "perfmodel_accuracy", "runtime_accuracy",
     "roofline", "collectives", "trace_overhead", "fault_overhead",
+    "calibration",
 )
 
 
@@ -81,6 +88,7 @@ def main(argv=None) -> None:
     from benchmarks import (
         alibaba_bench,
         bandwidth_scaling,
+        calibration_bench,
         collectives_bench,
         coopt_bench,
         fault_overhead,
@@ -108,6 +116,7 @@ def main(argv=None) -> None:
         ("collectives", collectives_bench),           # eq(1)/(2) on TPU rings
         ("trace_overhead", trace_overhead),           # span-recording gate
         ("fault_overhead", fault_overhead),           # recovery-machinery gate
+        ("calibration", calibration_bench),           # measured-profile gate
     ]
     # BENCH_NAMES exists so --list stays import-light; keep it honest
     assert tuple(n for n, _ in benches) == BENCH_NAMES, \

@@ -33,6 +33,7 @@ from repro.configs import get_config
 from repro.core import planner
 from repro.core.profiler import arch_model_profile, paper_model_profile
 from repro.serverless.frameworks import ALPHA_PAIRS
+from repro.serverless.execution import ExecutionConfig
 from repro.serverless.platform import ALIBABA_FC, AWS_LAMBDA
 from repro.serverless.runtime import Execution, run_plan
 from repro.serverless.simulator import simulate_funcpipe
@@ -80,8 +81,8 @@ def _walltime_rows(fast: bool):
         exe = Execution(cfg=cfg, optimizer=AdamW(lr=1e-3), init_params=params0,
                         batch_fn=lambda k: batches[k], **kw)
         t0 = time.time()
-        run_plan(prof, AWS_LAMBDA, config, total_micro_batches=d * mu,
-                 steps=steps, execution=exe)
+        run_plan(prof, AWS_LAMBDA, config, d * mu,
+                 ExecutionConfig(steps=steps), execution=exe)
         per_step = (time.time() - t0) / steps
         times[mode] = per_step
         out.append({"bench": "runtime_accuracy", "model": "walltime",
@@ -127,9 +128,10 @@ def _backend_parity_rows(fast: bool):
         exe = Execution(cfg=cfg, optimizer=AdamW(lr=1e-2),
                         init_params=params0, batch_fn=lambda k: batches[k])
         t0 = time.time()
-        results[backend] = run_plan(prof, AWS_LAMBDA, config,
-                                    total_micro_batches=d * mu, steps=steps,
-                                    execution=exe, backend=backend)
+        results[backend] = run_plan(prof, AWS_LAMBDA, config, d * mu,
+                                    ExecutionConfig(steps=steps,
+                                                    backend=backend),
+                                    execution=exe)
         out.append({"bench": "runtime_accuracy", "model": "backend_parity",
                     "platform": "host", "backend": backend, "steps": steps,
                     "sec_per_step": round((time.time() - t0) / steps, 3)})
@@ -176,7 +178,8 @@ def rows(fast: bool = False):
                                     "plan": tag, "status": "infeasible"})
                         continue
                     sim = simulate_funcpipe(r.profile, platform, r.config, M)
-                    eng = run_plan(r.profile, platform, r.config, M, steps=2)
+                    eng = run_plan(r.profile, platform, r.config, M,
+                                   ExecutionConfig(steps=2))
                     err_model = abs(r.evaluation.t_iter - eng.t_iter) / eng.t_iter
                     err_sim = abs(sim.t_iter - eng.t_iter) / eng.t_iter
                     max_eng = max(max_eng, err_sim)

@@ -31,6 +31,7 @@ from repro.core.partition import merge_layers
 from repro.core.perfmodel import Config
 from repro.core.profiler import paper_model_profile
 from repro.serverless.platform import AWS_LAMBDA
+from repro.serverless.execution import ExecutionConfig
 from repro.serverless.runtime import run_plan
 
 _REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -51,8 +52,8 @@ def _plan(d):
 def _time_once(backend, trace, *, d, M, steps):
     prof, cfg = _plan(d)
     t0 = time.perf_counter()
-    res = run_plan(prof, AWS_LAMBDA, cfg, M, steps=steps, backend=backend,
-                   trace=trace)
+    res = run_plan(prof, AWS_LAMBDA, cfg, M,
+                   ExecutionConfig(steps=steps, backend=backend, trace=trace))
     host = time.perf_counter() - t0
     n_spans = 0 if res.trace is None else len(res.trace.spans)
     return host / steps, n_spans

@@ -24,9 +24,11 @@ from repro.api.session import (
     Session,
     session,
 )
+from repro.serverless.execution import ExecutionConfig
 
 __all__ = [
     "DeploymentPlan",
+    "ExecutionConfig",
     "InfeasiblePlanError",
     "PlanCache",
     "PlanCompatibilityError",

@@ -45,7 +45,13 @@ def profile_fingerprint(profile: ModelProfile,
     bandwidth curve, storage latency/caps, contention beta) are folded in —
     the compute tables embed some platform behavior but not the cost and
     communication constants, and a plan replayed after those drift would
-    otherwise pass the guard and silently report different numbers."""
+    otherwise pass the guard and silently report different numbers.
+
+    Profile *provenance* is folded in only for non-analytic sources: every
+    pre-provenance fingerprint (saved plans, plan-cache keys) stays
+    byte-stable, while a measured profile — even one whose numbers happen to
+    coincide with the analytic tables — can never collide with an analytic
+    plan-cache entry."""
     arr = profile.arrays()
     h = hashlib.sha256()
     h.update(f"{profile.name}:{profile.L}".encode())
@@ -55,6 +61,11 @@ def profile_fingerprint(profile: ModelProfile,
     if platform is not None:
         h.update(json.dumps(dataclasses.asdict(platform),
                             sort_keys=True).encode())
+    if getattr(profile, "source", "analytic") != "analytic":
+        h.update(f"source={profile.source}".encode())
+        if profile.calibration is not None:
+            h.update(json.dumps(dataclasses.asdict(profile.calibration),
+                                sort_keys=True).encode())
     return h.hexdigest()[:16]
 
 
@@ -91,6 +102,8 @@ class DeploymentPlan:
     solver: str                   # cd | exhaustive | tpdmp | bayes | manual
     engine: str                   # batch | scalar | dp | -
     solve_seconds: float          # provenance only; excluded from the hash
+    profile_source: str = "analytic"   # provenance of the solved-against
+    #                                    profile: analytic | measured
     version: int = SCHEMA_VERSION
 
     # ------------------------------------------------------------ properties
@@ -142,6 +155,7 @@ class DeploymentPlan:
             t_iter=float(ev.t_iter), c_iter=float(ev.c_iter),
             objective=float(result.objective), solver=solver, engine=engine,
             solve_seconds=float(result.solve_seconds),
+            profile_source=result.profile.source,
         )
 
     @classmethod
@@ -167,7 +181,7 @@ class DeploymentPlan:
             profile_fingerprint=profile_fingerprint(profile, platform),
             t_iter=float(ev.t_iter), c_iter=float(ev.c_iter),
             objective=float(ev.c_iter), solver=solver, engine="-",
-            solve_seconds=0.0,
+            solve_seconds=0.0, profile_source=profile.source,
         )
 
     # --------------------------------------------------------- serialization
@@ -187,6 +201,9 @@ class DeploymentPlan:
         if version != SCHEMA_VERSION:
             raise PlanCompatibilityError(
                 f"plan schema version {version} != supported {SCHEMA_VERSION}")
+        # pre-provenance plans (PR <= 8) predate profile_source; they were
+        # by construction solved against analytic profiles
+        d.setdefault("profile_source", "analytic")
         names = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - names
         if unknown:
@@ -229,6 +246,14 @@ class DeploymentPlan:
             except KeyError as e:
                 raise PlanCompatibilityError(str(e)) from None
         if profile is None:
+            if self.profile_source != "analytic":
+                raise PlanCompatibilityError(
+                    f"plan for {self.model!r} was solved against a "
+                    f"{self.profile_source} profile, which the profiler "
+                    "cannot rebuild (it only derives analytic tables) — "
+                    "pass the measured profile explicitly "
+                    "(ModelProfile.load(...) via profile=, or "
+                    "`repro simulate/emulate --profile measured.json`)")
             try:
                 full = resolve_profile(self.model, platform, seq=self.seq,
                                        micro_batch=self.micro_batch)
@@ -239,14 +264,22 @@ class DeploymentPlan:
         if check:
             got = profile_fingerprint(profile, platform)
             if got != self.profile_fingerprint:
+                src = getattr(profile, "source", "analytic")
+                why = (
+                    f"  Profile source mismatch: the plan was solved "
+                    f"against a {self.profile_source} profile but a "
+                    f"{src} profile was supplied."
+                    if src != self.profile_source else
+                    "  The profiler or platform model changed since the "
+                    "plan was saved — re-plan, or pass the original "
+                    "profile explicitly.")
                 raise PlanCompatibilityError(
                     f"profile/platform fingerprint mismatch for model "
                     f"{self.model!r} on {platform.name}: plan was solved "
-                    f"against {self.profile_fingerprint}, freshly built "
-                    f"state is {got} (L={profile.L}, "
-                    f"merge_to={self.merge_to}).  The profiler or platform "
-                    "model changed since the plan was saved — re-plan, or "
-                    "pass the original profile explicitly.")
+                    f"against {self.profile_fingerprint} "
+                    f"({self.profile_source}), freshly built state is "
+                    f"{got} ({src}; L={profile.L}, "
+                    f"merge_to={self.merge_to}).{why}")
         L = profile.L
         if len(self.x) != L - 1 or len(self.z) != L:
             raise PlanCompatibilityError(
@@ -283,44 +316,44 @@ class DeploymentPlan:
                                  pipelined_sync=rp.pipelined_sync,
                                  contention=contention, trace=trace)
 
-    def emulate(self, *, steps: int = 1, contention: bool = False,
-                execution=None, backend="emulated", trace: bool = False,
-                faults=None, tolerance=None, payload_true: bool = False,
-                throttle: bool = False, **resolve_kw):
+    def emulate(self, exec_config=None, *, steps=None, contention: bool = False,
+                execution=None, backend=None, trace=None,
+                faults=None, tolerance=None, payload_true=None,
+                throttle=None, bandwidth=None, **resolve_kw):
         """Execute through the storage-backed engine on an execution
         backend: ``"emulated"`` (virtual-clock cost model), ``"local"``
         (real concurrent workers, wall-clock), ``"process"`` (real OS
         worker processes over a file store), or any registered
         :class:`repro.serverless.backends.ExecutionBackend`.  The same saved
-        plan JSON drives every backend unmodified.  ``trace=True`` records
-        per-worker spans on the backend's clock (``EngineResult.trace``).
-        ``faults`` (a :class:`~repro.serverless.faults.FaultPlan` or a path
-        to its JSON) chaos-tests the run; ``tolerance``
-        (:class:`~repro.serverless.faults.FaultTolerance`) configures the
-        engine's retry/checkpoint/restart recovery.  ``payload_true`` /
-        ``throttle`` calibrate the process backend's byte and time axes
-        (real payload sizes, modeled-bandwidth transfer sleeps); they
-        require ``backend="process"``."""
+        plan JSON drives every backend unmodified.
+
+        How to execute is an :class:`repro.serverless.execution.
+        ExecutionConfig` — backend, steps, tracing, the process backend's
+        ``payload_true``/``throttle``/``bandwidth`` calibration axes,
+        ``faults`` chaos injection and ``tolerance`` recovery policy.  The
+        individual keywords are the deprecated legacy spelling shimmed
+        through the same config (never mix the two).  ``trace=True``
+        records per-worker spans on the backend's clock
+        (``EngineResult.trace``) with this plan's document embedded in the
+        trace metadata, so ``repro calibrate`` can re-plan straight from
+        the file."""
+        from repro.serverless.execution import ExecutionConfig
         from repro.serverless.runtime import run_plan
 
-        if payload_true or throttle:
-            from repro.serverless.backends import ProcessBackend, get_backend
-
-            backend = get_backend(backend)
-            if not isinstance(backend, ProcessBackend):
-                raise ValueError(
-                    "payload_true/throttle need the process backend (real "
-                    "payloads moving through a real store); pass "
-                    "backend='process'")
-            backend.payload_true = bool(payload_true)
-            backend.throttle = bool(throttle)
+        ec = ExecutionConfig.merge(
+            exec_config,
+            dict(backend=backend, steps=steps, trace=trace, faults=faults,
+                 tolerance=tolerance, payload_true=payload_true,
+                 throttle=throttle, bandwidth=bandwidth),
+            where="DeploymentPlan.emulate")
         rp = self.resolve(**resolve_kw)
-        return run_plan(rp.profile, rp.platform, rp.config,
-                        rp.total_micro_batches, steps=steps,
-                        pipelined_sync=rp.pipelined_sync,
-                        contention=contention, execution=execution,
-                        backend=backend, trace=trace,
-                        faults=faults, tolerance=tolerance)
+        res = run_plan(rp.profile, rp.platform, rp.config,
+                       rp.total_micro_batches, ec,
+                       pipelined_sync=rp.pipelined_sync,
+                       contention=contention, execution=execution)
+        if res.trace is not None:
+            res.trace.meta["plan"] = self._as_dict()
+        return res
 
     # ------------------------------------------------------------ describing
     def describe(self) -> str:

@@ -69,6 +69,7 @@ class Session:
         self.evaluation = None                      # perfmodel Evaluation
         self.sim_result = None                      # simulator SimResult
         self.engine_result = None                   # runtime EngineResult
+        self.calibration = None                     # obs.calibrate.Calibration
 
     @property
     def total_micro_batches(self) -> int:
@@ -219,23 +220,58 @@ class Session:
             platform=self.platform)
         return self
 
-    def emulate(self, *, steps: int = 1, execution=None,
-                backend="emulated", trace: bool = False,
-                faults=None, tolerance=None, payload_true: bool = False,
-                throttle: bool = False) -> "Session":
-        """Execute the plan through the storage-backed runtime engine on the
-        chosen execution backend (``"emulated"``, ``"local"``,
-        ``"process"``, or an
-        :class:`~repro.serverless.backends.ExecutionBackend` instance).
-        ``trace=True`` records per-worker spans (``engine_result.trace``);
-        ``faults``/``tolerance`` chaos-test the run and configure recovery
-        (see :mod:`repro.serverless.faults`); ``payload_true``/``throttle``
-        calibrate the process backend's byte and time axes."""
+    def emulate(self, exec_config=None, *, steps=None, execution=None,
+                backend=None, trace=None, faults=None, tolerance=None,
+                payload_true=None, throttle=None,
+                bandwidth=None) -> "Session":
+        """Execute the plan through the storage-backed runtime engine.
+
+        How to execute is an :class:`repro.serverless.execution.
+        ExecutionConfig` (backend, steps, tracing, the process backend's
+        payload-true/throttle/bandwidth calibration axes, fault injection
+        and recovery policy); the individual keywords are the deprecated
+        legacy spelling shimmed through the same config.  ``trace=True``
+        records per-worker spans (``engine_result.trace``) — the input
+        :meth:`calibrate` folds back into a measured profile."""
+        from repro.serverless.execution import ExecutionConfig
+
+        ec = ExecutionConfig.merge(
+            exec_config,
+            dict(backend=backend, steps=steps, trace=trace, faults=faults,
+                 tolerance=tolerance, payload_true=payload_true,
+                 throttle=throttle, bandwidth=bandwidth),
+            where="Session.emulate")
         self.engine_result = self._require_plan().emulate(
-            steps=steps, contention=self.contention, execution=execution,
-            backend=backend, trace=trace, faults=faults, tolerance=tolerance,
-            payload_true=payload_true, throttle=throttle,
+            ec, contention=self.contention, execution=execution,
             profile=self._merged_profile(), platform=self.platform)
+        return self
+
+    # ------------------------------------------------------ calibration loop
+    def calibrate(self, *, warmup: Optional[int] = None) -> "Session":
+        """Fold the last traced emulation back into a *measured* profile.
+
+        Requires a prior ``.emulate(ExecutionConfig(trace=True, ...))``.
+        The session's profile is replaced by the measured one (already at
+        the plan's merged depth — subsequent merging is a no-op), so a
+        following ``.plan(...)`` re-solves against observed reality; the
+        :class:`repro.obs.calibrate.Calibration` artifact (observations,
+        per-stage scales, named perf-model warnings, residuals) lands on
+        ``self.calibration``."""
+        from repro.obs.calibrate import calibrate_profile
+
+        if self.engine_result is None or self.engine_result.trace is None:
+            raise ValueError(
+                "calibrate() needs a traced emulation first — call "
+                ".emulate(ExecutionConfig(trace=True, ...)) on this session")
+        plan = self.deployment_plan
+        rp = plan.resolve(profile=self._merged_profile(),
+                          platform=self.platform)
+        cal = calibrate_profile(
+            self.engine_result.trace, rp.profile, rp.platform, rp.config,
+            rp.total_micro_batches, pipelined_sync=rp.pipelined_sync,
+            warmup=warmup)
+        self.calibration = cal
+        self.model_profile = cal.profile
         return self
 
     def _merged_profile(self) -> ModelProfile:

@@ -174,6 +174,20 @@ def _load_or_plan(args):
     return s.plan(**_plan_kw(args)).deployment_plan
 
 
+def _profile_override(args) -> dict:
+    """``--profile FILE``: resolve the plan against a saved (typically
+    *measured*) ModelProfile instead of rebuilding the analytic tables —
+    the only way to replay a plan whose ``profile_source`` is measured."""
+    if not getattr(args, "profile", None):
+        return {}
+    from repro.core.partition import ModelProfile
+
+    try:
+        return {"profile": ModelProfile.load(args.profile)}
+    except FileNotFoundError:
+        raise SystemExit(f"error: no such profile file: {args.profile}")
+
+
 # ------------------------------------------------------------------- plan
 def _cmd_plan(args) -> int:
     if not args.model:
@@ -202,7 +216,8 @@ def _cmd_simulate(args) -> int:
 
     plan = _load_or_plan(args)
     print(plan.describe())
-    rp = plan.resolve()     # one profile rebuild + fingerprint check
+    # one profile rebuild + fingerprint check (--profile overrides rebuild)
+    rp = plan.resolve(**_profile_override(args))
     sim = simulate_funcpipe(rp.profile, rp.platform, rp.config,
                             rp.total_micro_batches,
                             pipelined_sync=rp.pipelined_sync,
@@ -322,6 +337,7 @@ def _cmd_emulate(args) -> int:
             ("--engine", args.engine != "batch"),
             ("--max-stages", args.max_stages is not None),
             ("--fast", args.fast),
+            ("--profile", bool(args.profile)),
         ] if passed]
         if ignored:
             raise SystemExit(
@@ -331,61 +347,47 @@ def _cmd_emulate(args) -> int:
         rp = plan.resolve(profile=prof)
     else:
         plan = _load_or_plan(args)
-        rp = plan.resolve()
+        rp = plan.resolve(**_profile_override(args))
         ex = None
     print(plan.describe())
     if args.out:
         plan.save(args.out)
         print(f"wrote {args.out} (content hash {plan.content_hash})")
 
-    from repro.serverless.backends import get_backend
+    from repro.serverless.execution import ExecutionConfig
 
-    faults_obj, tol = None, None
-    if (args.fault_plan or args.fault_seed is not None
-            or args.retries is not None or args.checkpoint_every is not None):
+    faults_obj = None
+    if args.fault_plan and args.fault_seed is not None:
+        raise SystemExit("--fault-plan and --fault-seed are mutually "
+                         "exclusive (one names the schedule, the other "
+                         "generates it)")
+    if args.fault_plan or args.fault_seed is not None:
         from repro.serverless import faults as F
 
-        if args.fault_plan and args.fault_seed is not None:
-            raise SystemExit("--fault-plan and --fault-seed are mutually "
-                             "exclusive (one names the schedule, the other "
-                             "generates it)")
         if args.fault_plan:
             faults_obj = F.FaultPlan.load(args.fault_plan)
-        elif args.fault_seed is not None:
+        else:
             faults_obj = F.FaultPlan.generate(
                 args.fault_seed, steps=args.steps,
                 S=sum(rp.config.x) + 1, d=rp.config.d)
-        tol_kw = {}
-        if args.retries is not None:
-            tol_kw["retry"] = F.RetryPolicy(max_attempts=args.retries)
-        if args.checkpoint_every is not None:
-            tol_kw["checkpoint_every"] = args.checkpoint_every
-        tol = F.FaultTolerance(**tol_kw)
-        if faults_obj is not None:
-            print(f"fault plan: {faults_obj.counts() or 'empty'} "
-                  f"(seed={faults_obj.seed})")
+        print(f"fault plan: {faults_obj.counts() or 'empty'} "
+              f"(seed={faults_obj.seed})")
 
-    with _operator_errors():        # unknown backend name lists the registry
-        backend = get_backend(args.backend)
-    throttle = bool(args.throttle or args.bandwidth is not None)
-    if args.payload_true or throttle:
-        from repro.serverless.backends import ProcessBackend
-
-        if not isinstance(backend, ProcessBackend):
-            raise SystemExit(
-                "error: --payload-true/--throttle/--bandwidth need the "
-                "process backend (real payloads moving through a real "
-                "store); pass --backend process")
-        backend.payload_true = bool(args.payload_true)
-        backend.throttle = throttle
-        if args.bandwidth is not None:
-            backend.bandwidth = args.bandwidth
+    try:
+        ec = ExecutionConfig(
+            backend=args.backend, steps=args.steps, trace=bool(args.trace),
+            payload_true=bool(args.payload_true),
+            throttle=bool(args.throttle), bandwidth=args.bandwidth,
+            faults=faults_obj, retries=args.retries,
+            checkpoint_every=args.checkpoint_every)
+        with _operator_errors():    # unknown backend name lists the registry
+            ec.resolve_backend()    # all execution validation lives here
+    except ValueError as e:
+        raise SystemExit(f"error: {e}") from None
     res = run_plan(rp.profile, rp.platform, rp.config,
-                   rp.total_micro_batches, steps=args.steps,
+                   rp.total_micro_batches, ec,
                    pipelined_sync=rp.pipelined_sync,
-                   contention=args.contention, execution=ex,
-                   backend=backend, trace=bool(args.trace),
-                   faults=faults_obj, tolerance=tol)
+                   contention=args.contention, execution=ex)
     for k, m in enumerate(res.metrics):
         print(f"step {k}: loss={m['loss']:.4f} ce={m['ce']:.4f} "
               f"aux={m['aux']:.4f}")
@@ -414,6 +416,9 @@ def _cmd_emulate(args) -> int:
                                   pipelined_sync=rp.pipelined_sync,
                                   contention=args.contention, trace=True)
         res.trace.predicted = sim_t.trace.spans
+        # embed the plan document so `repro calibrate` (and inspect) can
+        # re-plan straight from the file, no plan JSON needed
+        res.trace.meta["plan"] = plan._as_dict()
         res.trace.save(args.trace)
         print(f"wrote trace {args.trace} ({len(res.trace.spans)} spans + "
               f"{len(sim_t.trace.spans)} predicted)")
@@ -613,6 +618,43 @@ def _cmd_inspect(args) -> int:
     return 0
 
 
+# -------------------------------------------------------------- calibrate
+def _cmd_calibrate(args) -> int:
+    from repro.api import DeploymentPlan
+    from repro.obs import Trace, calibrate_trace, replan
+
+    try:
+        trace = Trace.load(args.trace_file)
+    except FileNotFoundError:
+        raise SystemExit(f"error: no such trace file: {args.trace_file}")
+    plan = None
+    if args.plan:
+        try:
+            plan = DeploymentPlan.load(args.plan)
+        except FileNotFoundError:
+            raise SystemExit(f"error: no such plan file: {args.plan}")
+    try:
+        cal, plan = calibrate_trace(trace, plan=plan, warmup=args.warmup)
+    except ValueError as e:
+        raise SystemExit(f"error: {e}") from None
+    print(cal.describe())
+    if args.profile_out:
+        cal.profile.save(args.profile_out)
+        print(f"wrote measured profile {args.profile_out}")
+    if args.no_replan:
+        return 0
+    alpha = (1.0, args.alpha2) if args.alpha2 is not None else None
+    rep = replan(cal, plan, alpha=alpha, engine=args.engine)
+    print(rep.describe())
+    if args.out:
+        rep.new_plan.save(args.out)
+        hint = args.profile_out or "PROFILE.json (save one with --profile-out)"
+        print(f"wrote re-planned {args.out} (content hash "
+              f"{rep.new_plan.content_hash}); replay it with "
+              f"`repro simulate/emulate {args.out} --profile {hint}`")
+    return 0
+
+
 # ------------------------------------------------------------------ bench
 def _cmd_bench(args) -> int:
     try:
@@ -667,6 +709,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--trace", default=None, metavar="OUT.json",
                    help="write the simulator's predicted span timeline as a "
                         "Chrome/Perfetto trace (see `repro inspect`)")
+    p.add_argument("--profile", default=None, metavar="PROFILE.json",
+                   help="resolve the plan against this saved ModelProfile "
+                        "(e.g. a measured profile from `repro calibrate "
+                        "--profile-out`) instead of rebuilding the analytic "
+                        "tables — required to replay measured plans")
     p.set_defaults(func=_cmd_simulate)
 
     p = sub.add_parser("emulate",
@@ -724,6 +771,11 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--checkpoint-every", type=int, default=None, metavar="N",
                    help="checkpoint stage state into the object store every "
                         "N steps (default 1 when fault tolerance is on)")
+    p.add_argument("--profile", default=None, metavar="PROFILE.json",
+                   help="resolve the plan against this saved ModelProfile "
+                        "(e.g. a measured profile from `repro calibrate "
+                        "--profile-out`) instead of rebuilding the analytic "
+                        "tables — required to replay measured plans")
     p.set_defaults(func=_cmd_emulate)
 
     p = sub.add_parser("inspect",
@@ -733,6 +785,37 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--top", type=int, default=10,
                    help="attribution rows to print (default 10)")
     p.set_defaults(func=_cmd_inspect)
+
+    p = sub.add_parser("calibrate",
+                       help="fold a traced run back into a measured "
+                            "profile, re-plan on it and report the delta")
+    p.add_argument("trace_file",
+                   help="trace JSON from `repro emulate --trace` (the plan "
+                        "document is embedded in the trace metadata)")
+    p.add_argument("--plan", default=None, metavar="PLAN.json",
+                   help="plan the trace executed (only needed for traces "
+                        "written before plans were embedded in trace "
+                        "metadata)")
+    p.add_argument("--warmup", type=int, default=None, metavar="N",
+                   help="drop the first N steps from the averages (default: "
+                        "1 on multi-step wall-clock traces — JIT compile "
+                        "skew — else 0)")
+    p.add_argument("--alpha2", type=float, default=None,
+                   help="re-plan objective time weight (default: the plan's "
+                        "recorded alpha; manual/numeric plans record "
+                        "cost-only)")
+    p.add_argument("--engine", default="dp",
+                   choices=("dp", "batch", "scalar"),
+                   help="re-plan engine (default dp: exact at the measured "
+                        "profile's full depth)")
+    p.add_argument("--no-replan", action="store_true",
+                   help="only calibrate and report; skip the re-plan")
+    p.add_argument("--profile-out", default=None, metavar="PROFILE.json",
+                   help="save the measured ModelProfile here (replay plans "
+                        "with `repro simulate/emulate --profile`)")
+    p.add_argument("-o", "--out", default=None, metavar="PLAN.json",
+                   help="save the re-planned DeploymentPlan here")
+    p.set_defaults(func=_cmd_calibrate)
 
     p = sub.add_parser("sweep", help="Pareto frontier + recommendation + "
                                      "baseline algorithms (paper §5)")

@@ -9,8 +9,9 @@ x_i "partitioned after layer i").  Stages are the contiguous runs.
 from __future__ import annotations
 
 import dataclasses
+import json
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -153,10 +154,39 @@ class LayerProfile:
     bwd_time: Tuple[float, ...]   # T_bc^{i,j}
 
 
+PROFILE_SOURCES = ("analytic", "measured")
+PROFILE_SCHEMA_VERSION = 1
+
+
+@dataclass(frozen=True)
+class CalibrationMeta:
+    """Provenance of a *measured* profile: which traced run patched it.
+
+    Frozen with scalar fields only — :class:`ModelProfile` is an
+    ``lru_cache`` key in ``perfmodel.perf_tables``, so everything hanging
+    off it must stay hashable."""
+
+    backend: str                 # execution backend that produced the trace
+    clock: str                   # "wall" | "virtual"
+    steps: int                   # traced training steps folded in
+    base_fingerprint: str        # fingerprint of the analytic profile patched
+    t_total: float               # traced run's total seconds (trace clock)
+
+
 @dataclass(frozen=True)
 class ModelProfile:
     name: str
     layers: Tuple[LayerProfile, ...]
+    source: str = "analytic"                      # analytic | measured
+    calibration: Optional[CalibrationMeta] = None
+
+    def __post_init__(self):
+        if self.source not in PROFILE_SOURCES:
+            raise ValueError(
+                f"profile source {self.source!r} not in {PROFILE_SOURCES}")
+        if self.source == "measured" and self.calibration is None:
+            raise ValueError(
+                "a measured profile must carry its CalibrationMeta")
 
     @property
     def L(self) -> int:
@@ -186,6 +216,52 @@ class ModelProfile:
     @property
     def param_bytes(self) -> float:
         return float(sum(l.param_bytes for l in self.layers))
+
+    # --------------------------------------------------------- serialization
+    # Analytic profiles are rebuilt from the profiler and never serialized;
+    # measured profiles (repro.obs.calibrate) exist only as artifacts of a
+    # traced run, so they round-trip through JSON like DeploymentPlans do.
+    def to_json(self, *, indent: Optional[int] = 2) -> str:
+        d = {
+            "version": PROFILE_SCHEMA_VERSION,
+            "name": self.name,
+            "source": self.source,
+            "calibration": (None if self.calibration is None
+                            else dataclasses.asdict(self.calibration)),
+            "layers": [dataclasses.asdict(l) for l in self.layers],
+        }
+        return json.dumps(d, indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, blob: str) -> "ModelProfile":
+        d = json.loads(blob)
+        version = d.get("version")
+        if version != PROFILE_SCHEMA_VERSION:
+            raise ValueError(f"profile schema version {version!r} != "
+                             f"supported {PROFILE_SCHEMA_VERSION}")
+        layers = tuple(LayerProfile(
+            name=l["name"],
+            param_bytes=float(l["param_bytes"]),
+            act_bytes=float(l["act_bytes"]),
+            out_bytes=float(l["out_bytes"]),
+            grad_out_bytes=float(l["grad_out_bytes"]),
+            fwd_time=tuple(float(t) for t in l["fwd_time"]),
+            bwd_time=tuple(float(t) for t in l["bwd_time"]),
+        ) for l in d["layers"])
+        cal = d.get("calibration")
+        return cls(name=d["name"], layers=layers,
+                   source=d.get("source", "analytic"),
+                   calibration=(None if cal is None
+                                else CalibrationMeta(**cal)))
+
+    def save(self, path) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path) -> "ModelProfile":
+        with open(path) as f:
+            return cls.from_json(f.read())
 
 
 def merge_boundaries(profile: ModelProfile, target_L: int,
@@ -254,4 +330,7 @@ def merge_layers(profile: ModelProfile, target_L: int,
             bwd_time=tuple(sum(l.bwd_time[j] for l in sub) for j in range(J)),
         )
 
-    return ModelProfile(name=profile.name, layers=tuple(merge_group(g) for g in groups))
+    return ModelProfile(name=profile.name,
+                        layers=tuple(merge_group(g) for g in groups),
+                        source=profile.source,
+                        calibration=profile.calibration)

@@ -7,8 +7,23 @@ pipeline-health metrics, and differenced into a predicted-vs-observed gap
 attribution.  Front doors: ``run_plan(..., trace=True)`` /
 ``Session.emulate(trace=True)`` / ``repro emulate --trace out.json`` /
 ``repro inspect out.json``.
+
+PR 9 closes the loop: ``repro.obs.calibrate`` folds a traced run back into a
+*measured* ``ModelProfile`` and re-plans on it — ``Session.emulate(...)
+.calibrate().plan()`` or ``repro calibrate trace.json``.
 """
 from repro.obs.attribution import ELAPSED, GapRow, gap_attribution
+from repro.obs.calibrate import (
+    Calibration,
+    PerfModelWarning,
+    ReplanReport,
+    StageObservation,
+    calibrate_profile,
+    calibrate_trace,
+    observe_stages,
+    replan,
+    stage_prediction_errors,
+)
 from repro.obs.metrics import pipeline_health
 from repro.obs.schema import (
     OPS,
@@ -26,4 +41,7 @@ __all__ = [
     "ELAPSED", "GapRow", "gap_attribution", "pipeline_health",
     "OPS", "PHASES", "RESOURCE_OF", "Span", "SpanRecorder", "Trace",
     "TraceValidationError", "WorkerTracer", "validate_trace",
+    "Calibration", "PerfModelWarning", "ReplanReport", "StageObservation",
+    "calibrate_profile", "calibrate_trace", "observe_stages", "replan",
+    "stage_prediction_errors",
 ]

@@ -148,12 +148,13 @@ def funcpipe_replay(
             rp.profile, rp.platform, rp.config, rp.total_micro_batches,
             pipelined_sync=rp.pipelined_sync, contention=contention))
         if engine_results is not None:
+            from repro.serverless.execution import ExecutionConfig
             from repro.serverless.runtime import run_plan
 
             engine_results.append(run_plan(
                 rp.profile, rp.platform, rp.config, rp.total_micro_batches,
-                steps=engine_steps, pipelined_sync=rp.pipelined_sync,
-                contention=contention, backend=backend))
+                ExecutionConfig(steps=engine_steps, backend=backend),
+                pipelined_sync=rp.pipelined_sync, contention=contention))
         kept.append(p)
     if not uniq:
         return None

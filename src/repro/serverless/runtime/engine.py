@@ -46,6 +46,7 @@ from typing import TYPE_CHECKING, Any, Callable, Dict, List, Optional, Union
 import numpy as np
 
 from repro.core.perfmodel import Config
+from repro.serverless.execution import ExecutionConfig
 from repro.serverless.platform import GB, Platform
 from repro.serverless.runtime.store import StoreStats
 from repro.serverless.simulator import stage_aggregates, unpack_plan_args
@@ -175,25 +176,30 @@ def run_plan(
     platform: Optional[Platform] = None,
     config: Optional[Config] = None,
     total_micro_batches: Optional[int] = None,
+    exec_config: Optional[ExecutionConfig] = None,
     *,
-    steps: int = 1,
+    steps: Optional[int] = None,
     pipelined_sync: Optional[bool] = None,
     contention: bool = False,
     execution: Optional[Execution] = None,
-    backend: Union[str, ExecutionBackend] = "emulated",
-    trace: bool = False,
+    backend: Union[None, str, ExecutionBackend] = None,
+    trace: Optional[bool] = None,
     faults: Optional[Any] = None,
     tolerance: Optional[Any] = None,
 ) -> EngineResult:
-    """Execute ``steps`` training iterations of the plan through a backend.
+    """Execute training iterations of the plan through a backend.
 
     Accepts either the explicit ``(profile, platform, config, M)`` tuple or a
     single :class:`repro.api.DeploymentPlan` as the first argument (see
-    ``simulator.unpack_plan_args``).  ``backend`` is a registry name
-    (``emulated``, ``local``, ...) or a pre-configured
-    :class:`ExecutionBackend` instance.  ``trace=True`` records one span per
-    worker resource task (download/compute/upload/barrier, plus per-chunk
-    scatter-reduce transfers) on the backend's clock and returns it as
+    ``simulator.unpack_plan_args``).  How to execute — backend, step count,
+    tracing, the process backend's calibration axes, fault injection and
+    recovery policy — is an :class:`repro.serverless.execution.
+    ExecutionConfig` (``exec_config``); the individual ``steps`` / ``backend``
+    / ``trace`` / ``faults`` / ``tolerance`` keywords are the deprecated
+    legacy spelling of the same settings and may not be mixed with it.
+    ``trace=True`` records one span per worker resource task
+    (download/compute/upload/barrier, plus per-chunk scatter-reduce
+    transfers) on the backend's clock and returns it as
     ``EngineResult.trace`` (a :class:`repro.obs.Trace`).
 
     Fault tolerance: ``faults`` (a :class:`repro.serverless.faults.FaultPlan`
@@ -205,30 +211,38 @@ def run_plan(
     the object store every N steps, and checkpoint/restart of the whole
     worker grid on a crash or function-lifetime expiry.  A chaos run must
     train to params bit-identical to the fault-free run."""
-    from repro.serverless.backends import get_backend
+    ec = ExecutionConfig.merge(
+        exec_config,
+        dict(backend=backend, steps=steps, trace=trace, faults=faults,
+             tolerance=tolerance),
+        where="run_plan")
+    steps, trace = ec.steps, ec.trace
 
+    # plan-accepting front door: remember the plan so a traced run is
+    # self-describing (repro calibrate reads it back out of the file)
+    plan_doc = None
+    if hasattr(profile, "_as_dict") and hasattr(profile, "resolve"):
+        plan_doc = profile._as_dict()
     profile, platform, config, total_micro_batches, pipelined_sync = \
         unpack_plan_args("run_plan", profile, platform, config,
                          total_micro_batches, pipelined_sync)
     agg = stage_aggregates(profile, platform, config, total_micro_batches,
                            contention=contention)
     S, mu, d = agg.S, agg.mu, agg.d
-    be = get_backend(backend)
+    be = ec.resolve_backend()
 
     # ------------------------------------------------- fault-tolerance setup
     # lazy import: runtime/__init__ imports this module at package-import
     # time, and faults.py imports backends (which imports runtime.store)
     report = None
-    faults_obj = None
-    tol = tolerance
+    faults_obj = ec.resolved_faults()
+    tol = ec.resolved_tolerance()
     if tol is None and execution is not None:
         tol = execution.tolerance
-    if faults is not None or tol is not None:
+    if faults_obj is not None or tol is not None:
         from repro.serverless import faults as F
 
-        if faults is not None:
-            faults_obj = (F.FaultPlan.load(faults) if isinstance(faults, str)
-                          else faults)
+        if faults_obj is not None:
             if tol is None:
                 tol = F.FaultTolerance()    # chaos implies recovery
         report = F.FaultReport()
@@ -457,12 +471,18 @@ def run_plan(
                 "step_syncs": [float(sync_durations[i])
                                for i in sorted(sync_durations)],
                 "bandwidth": [float(w) for w in agg.w],
+                "t_lat": float(agg.t_lat),
                 "pipelined_sync": bool(pipelined_sync),
+                "contention": bool(contention),
+                "payload_true": bool(ec.payload_true),
+                "throttle": bool(ec.throttle),
                 "store": stats.as_dict(),
             },
         )
         if report is not None:
             trace_obj.meta["fault_report"] = report.as_dict()
+        if plan_doc is not None:
+            trace_obj.meta["plan"] = plan_doc
     return EngineResult(
         t_iter=float(t_iter),
         t_total=float(t_total),

@@ -458,3 +458,102 @@ def test_launch_emulate_shim(capsys):
                        "--steps", "1"])
     assert rc == 0
     assert "engine[emulated]:" in capsys.readouterr().out
+
+
+# --------------------------------------------------------- execution config
+def test_execution_config_validation():
+    from repro.serverless.execution import ExecutionConfig
+
+    with pytest.raises(ValueError, match="steps"):
+        ExecutionConfig(steps=0)
+    with pytest.raises(ValueError, match="bandwidth"):
+        ExecutionConfig(bandwidth=-1.0)
+    with pytest.raises(ValueError, match="retries"):
+        ExecutionConfig(retries=0)
+    with pytest.raises(ValueError, match="checkpoint_every"):
+        ExecutionConfig(checkpoint_every=0)
+    # an explicit bandwidth is only meaningful as a throttle rate
+    assert ExecutionConfig(bandwidth=1e6).throttle
+    # the process-backend rule lives in ONE place: resolve_backend
+    for bad in (ExecutionConfig(payload_true=True),
+                ExecutionConfig(throttle=True),
+                ExecutionConfig(bandwidth=1e6)):
+        with pytest.raises(ValueError, match="process"):
+            bad.resolve_backend()
+    # ...and a process backend resolves configured
+    be = ExecutionConfig(backend="process", payload_true=True,
+                         bandwidth=2e6).resolve_backend()
+    assert be.payload_true and be.throttle and be.bandwidth == 2e6
+
+
+def test_execution_config_json_round_trip():
+    from repro.serverless import faults as F
+    from repro.serverless.backends import get_backend
+    from repro.serverless.execution import ExecutionConfig
+
+    ec = ExecutionConfig(
+        backend="process", steps=3, trace=True, payload_true=True,
+        bandwidth=1e6,
+        faults=F.FaultPlan(events=(
+            F.FaultEvent(kind="transient", stage=0, replica=0, step=0,
+                         op="put", index=0),)),
+        tolerance=F.FaultTolerance(retry=F.RetryPolicy(max_attempts=2)),
+        checkpoint_every=2)
+    again = ExecutionConfig.from_json(ec.to_json())
+    assert again == ec
+    with pytest.raises(ValueError, match="version"):
+        ExecutionConfig.from_json(json.dumps({"version": 99}))
+    with pytest.raises(ValueError, match="unknown"):
+        ExecutionConfig.from_json(json.dumps({"version": 1, "surprise": 1}))
+    # instance backends execute but do not serialize
+    inst = ExecutionConfig(backend=get_backend("emulated"))
+    with pytest.raises(TypeError, match="instance"):
+        inst.to_json()
+
+
+def test_emulate_legacy_kwargs_shim_bit_identical(bert_session):
+    from repro.serverless.execution import ExecutionConfig
+
+    plan = bert_session.deployment_plan
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        legacy = plan.emulate(steps=2)
+    new = plan.emulate(ExecutionConfig(steps=2))
+    assert legacy.t_iter == new.t_iter
+    assert legacy.t_total == new.t_total
+    assert legacy.store_stats.bytes_in == new.store_stats.bytes_in
+
+
+def test_emulate_rejects_mixed_spellings(bert_session):
+    from repro.serverless.execution import ExecutionConfig
+
+    with pytest.raises(ValueError, match="not both"):
+        bert_session.deployment_plan.emulate(ExecutionConfig(steps=1),
+                                             steps=2)
+
+
+def test_run_plan_legacy_shim_matches_config(bert_session):
+    from repro.serverless.execution import ExecutionConfig
+
+    rp = bert_session.deployment_plan.resolve()
+    with pytest.warns(DeprecationWarning):
+        legacy = run_plan(rp.profile, rp.platform, rp.config,
+                          rp.total_micro_batches, steps=1,
+                          pipelined_sync=rp.pipelined_sync)
+    new = run_plan(rp.profile, rp.platform, rp.config,
+                   rp.total_micro_batches, ExecutionConfig(steps=1),
+                   pipelined_sync=rp.pipelined_sync)
+    assert legacy.t_iter == new.t_iter
+    assert legacy.cost == new.cost
+
+
+def test_traced_emulate_embeds_plan_document(bert_session):
+    from repro.serverless.execution import ExecutionConfig
+
+    plan = bert_session.deployment_plan
+    res = plan.emulate(ExecutionConfig(steps=1, trace=True))
+    doc = res.trace.meta.get("plan")
+    assert doc is not None
+    assert DeploymentPlan.from_json(json.dumps(doc)) == plan
+    # calibration-relevant metadata rides along
+    assert res.trace.meta["t_lat"] == AWS_LAMBDA.storage_latency
+    assert res.trace.meta["payload_true"] is False

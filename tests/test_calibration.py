@@ -1,0 +1,256 @@
+"""Closed-loop trace calibration: measured-profile round-trip + provenance
+fingerprint drift, exact round-trip on the virtual-clock backend,
+calibrate-then-replan determinism, named perf-model warning signatures,
+the Session chain, and the `repro calibrate` CLI."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    DeploymentPlan,
+    ExecutionConfig,
+    PlanCompatibilityError,
+    session,
+)
+from repro.api.plan import profile_fingerprint
+from repro.cli import main as cli_main
+from repro.core.partition import ModelProfile, stages_of
+from repro.core.perfmodel import Config
+from repro.obs import Trace, calibrate_trace
+from repro.obs.calibrate import calibrate_profile, observe_stages, replan
+from repro.serverless.platform import AWS_LAMBDA
+
+ALPHA = (1.0, 2**16 * 1e-9)
+FAST = dict(merge_to=6, d_options=(1, 2, 4))
+
+
+@pytest.fixture(scope="module")
+def traced():
+    """One traced virtual-clock run: (plan, resolved, trace)."""
+    s = session("bert-large", platform="aws", global_batch=64).plan(
+        alpha=ALPHA, **FAST)
+    plan = s.deployment_plan
+    res = plan.emulate(ExecutionConfig(steps=1, trace=True))
+    return plan, plan.resolve(), res.trace
+
+
+def _calibrate(rp, trace, **kw):
+    return calibrate_profile(trace, rp.profile, rp.platform, rp.config,
+                             rp.total_micro_batches,
+                             pipelined_sync=rp.pipelined_sync, **kw)
+
+
+# ------------------------------------------------------------ exact loop
+def test_emulated_trace_round_trips_exactly(traced):
+    plan, rp, trace = traced
+    cal = _calibrate(rp, trace)
+    # the virtual-clock backend IS the cost model: scales are exactly 1,
+    # residuals are float noise, and no systematic warning may fire
+    for row in cal.scales:
+        for k in ("fwd", "bwd", "out", "grad"):
+            if row[k] is not None:
+                assert row[k] == pytest.approx(1.0, abs=1e-9)
+    assert cal.baseline["max_rel_err"] < 1e-9
+    assert cal.residual["max_rel_err"] <= cal.baseline["max_rel_err"] + 1e-12
+    assert not [w for w in cal.warnings if w.name != "unobserved-stages"]
+    assert cal.profile.source == "measured"
+    meta = cal.profile.calibration
+    assert meta.backend == "emulated" and meta.clock == "virtual"
+    assert meta.base_fingerprint == profile_fingerprint(rp.profile,
+                                                        rp.platform)
+
+
+def test_observe_stages_counts(traced):
+    plan, rp, trace = traced
+    obs = observe_stages(trace)
+    assert len(obs) == plan.n_stages
+    M = plan.total_micro_batches
+    for o in obs:
+        assert o.n_fwd == M and o.n_bwd == M
+
+
+# ----------------------------------------------------- provenance + JSON
+def test_measured_profile_json_round_trip(tmp_path, traced):
+    plan, rp, trace = traced
+    measured = _calibrate(rp, trace).profile
+    p = tmp_path / "measured.json"
+    measured.save(p)
+    again = ModelProfile.load(p)
+    assert again == measured
+    assert profile_fingerprint(again, rp.platform) \
+        == profile_fingerprint(measured, rp.platform)
+
+
+def test_measured_fingerprint_never_collides_with_analytic(traced):
+    plan, rp, trace = traced
+    measured = _calibrate(rp, trace).profile
+    # even with numerically identical tables (scales were exactly 1.0),
+    # provenance folds into the fingerprint: a measured profile can never
+    # hit an analytic plan-cache entry
+    fp_analytic = profile_fingerprint(rp.profile, rp.platform)
+    fp_measured = profile_fingerprint(measured, rp.platform)
+    assert fp_analytic != fp_measured
+    # ...and the calibration metadata is part of the identity
+    bumped = dataclasses.replace(
+        measured, calibration=dataclasses.replace(
+            measured.calibration, t_total=measured.calibration.t_total + 1))
+    assert profile_fingerprint(bumped, rp.platform) != fp_measured
+
+
+def test_measured_plan_resolve_guards(traced):
+    plan, rp, trace = traced
+    cal = _calibrate(rp, trace)
+    rep = replan(cal, plan)
+    assert rep.new_plan.profile_source == "measured"
+    # measured plans cannot be rebuilt by the profiler...
+    with pytest.raises(PlanCompatibilityError, match="measured"):
+        rep.new_plan.resolve()
+    # ...the analytic profile is named as a source mismatch...
+    with pytest.raises(PlanCompatibilityError, match="source mismatch"):
+        rep.new_plan.resolve(profile=rp.profile)
+    # ...and the measured profile resolves cleanly
+    rp2 = rep.new_plan.resolve(profile=cal.profile)
+    assert rp2.profile is cal.profile
+
+
+def test_calibrating_a_measured_profile_is_rejected(traced):
+    plan, rp, trace = traced
+    measured = _calibrate(rp, trace).profile
+    with pytest.raises(ValueError, match="analytic"):
+        calibrate_profile(trace, measured, rp.platform, rp.config,
+                          rp.total_micro_batches)
+
+
+# ---------------------------------------------------------- determinism
+def test_calibrate_then_replan_is_deterministic(traced):
+    plan, rp, trace = traced
+
+    def once():
+        res = plan.emulate(ExecutionConfig(steps=1, trace=True))
+        cal = _calibrate(rp, res.trace)
+        return cal, replan(cal, plan)
+
+    (cal1, rep1), (cal2, rep2) = once(), once()
+    assert cal1.profile == cal2.profile
+    assert rep1.new_plan.content_hash == rep2.new_plan.content_hash
+
+
+# ------------------------------------------------------ warning signatures
+def test_compute_underestimate_warning(traced):
+    plan, rp, trace = traced
+    slowed = Trace(spans=[
+        dataclasses.replace(s, end=s.start + 2.0 * s.duration)
+        if s.op == "compute" else s
+        for s in trace.spans], meta=dict(trace.meta))
+    cal = _calibrate(rp, slowed)
+    names = {w.name: w for w in cal.warnings}
+    assert "compute-underestimate" in names
+    assert names["compute-underestimate"].magnitude == pytest.approx(2.0,
+                                                                     rel=1e-6)
+    # the measured tables absorb the slowdown: residual error collapses
+    # (|pred - obs| / obs = |1 - 2| / 2 against the doubled spans)
+    assert cal.baseline["max_rel_err"] == pytest.approx(0.5, rel=1e-6)
+    assert cal.residual["max_rel_err"] < 1e-9
+    for row in cal.scales:
+        assert row["fwd"] == pytest.approx(2.0, rel=1e-6)
+        assert row["bwd"] == pytest.approx(2.0, rel=1e-6)
+
+
+def test_unobserved_stage_keeps_analytic_tables(traced):
+    plan, rp, trace = traced
+    holey = Trace(spans=[s for s in trace.spans
+                         if not (s.stage == 0 and s.op == "compute")],
+                  meta=dict(trace.meta))
+    cal = _calibrate(rp, holey)
+    assert any(w.name == "unobserved-stages" and 0 in w.stages
+               for w in cal.warnings)
+    # stage 0's layers keep the analytic values verbatim
+    (lo, hi) = stages_of(rp.config.x)[0]
+    for i in range(lo, hi + 1):
+        assert cal.profile.layers[i].fwd_time \
+            == rp.profile.layers[i].fwd_time
+
+
+def test_eq2_sync_underestimate_warning():
+    # the fast bert plan solves to d=1 (no sync), so build a manual d=2
+    # deployment and inflate the observed per-step sync makespan
+    from repro.core.partition import merge_layers
+    from repro.core.profiler import paper_model_profile
+
+    prof = merge_layers(paper_model_profile("bert-large", AWS_LAMBDA), 6)
+    L = prof.L
+    cfg = Config(x=tuple(1 if i == 2 else 0 for i in range(L - 1)),
+                 d=2, z=tuple(5 for _ in range(L)))
+    plan = DeploymentPlan.from_config(prof, AWS_LAMBDA, cfg, 8,
+                                      model="bert-large", merge_to=6)
+    res = plan.emulate(ExecutionConfig(steps=1, trace=True),
+                       profile=prof)
+    trace = res.trace
+    trace.meta["step_syncs"] = [3.0 * v for v in trace.meta["step_syncs"]]
+    cal = calibrate_profile(trace, prof, AWS_LAMBDA, cfg, 8)
+    names = [w.name for w in cal.warnings]
+    assert "eq2-sync-underestimate" in names
+    w = next(w for w in cal.warnings if w.name == "eq2-sync-underestimate")
+    assert w.magnitude == pytest.approx(3.0, rel=0.2)
+
+
+# ------------------------------------------------------------- session chain
+def test_session_calibrate_chain():
+    s = session("bert-large", platform="aws", global_batch=64).plan(
+        alpha=ALPHA, **FAST)
+    with pytest.raises(ValueError, match="traced emulation"):
+        s.calibrate()
+    s.emulate(ExecutionConfig(steps=1, trace=True)).calibrate()
+    assert s.calibration is not None
+    assert s.model_profile.source == "measured"
+    # re-planning now solves against observed reality; the plan records it
+    s.plan(alpha=ALPHA, merge_to=None, engine="dp")
+    assert s.deployment_plan.profile_source == "measured"
+    # and the measured plan replays through the session unchanged
+    s.emulate(ExecutionConfig(steps=1))
+    assert s.engine_result is not None
+
+
+# ------------------------------------------------------------ trace front door
+def test_calibrate_trace_from_saved_file(tmp_path, traced):
+    plan, rp, trace = traced
+    p = tmp_path / "trace.json"
+    trace.save(p)
+    cal, plan2 = calibrate_trace(Trace.load(p))
+    assert plan2.content_hash == plan.content_hash
+    assert cal.profile.source == "measured"
+    # a trace without an embedded plan needs one passed explicitly
+    bare = Trace(spans=list(trace.spans),
+                 meta={k: v for k, v in trace.meta.items() if k != "plan"})
+    with pytest.raises(ValueError, match="plan"):
+        calibrate_trace(bare)
+    cal2, _ = calibrate_trace(bare, plan=plan)
+    assert cal2.profile == cal.profile
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_calibrate_loop(tmp_path, capsys):
+    t, pl = str(tmp_path / "t.json"), str(tmp_path / "plan.json")
+    mp, rp = str(tmp_path / "measured.json"), str(tmp_path / "replan.json")
+    assert cli_main(["emulate", "--model", "bert-large", "--fast",
+                     "--steps", "1", "--trace", t, "-o", pl]) == 0
+    capsys.readouterr()
+    assert cli_main(["calibrate", t, "--profile-out", mp, "-o", rp]) == 0
+    out = capsys.readouterr().out
+    assert "prediction error" in out
+    assert "re-plan on the measured profile" in out
+    # measured plans replay only with their measured profile
+    assert cli_main(["simulate", rp, "--profile", mp]) == 0
+    with pytest.raises(SystemExit, match="measured"):
+        cli_main(["simulate", rp])
+    # --no-replan stops after the calibration report
+    capsys.readouterr()
+    assert cli_main(["calibrate", t, "--no-replan"]) == 0
+    assert "re-plan" not in capsys.readouterr().out
+
+
+def test_cli_calibrate_rejects_bad_inputs(tmp_path):
+    with pytest.raises(SystemExit, match="no such trace"):
+        cli_main(["calibrate", str(tmp_path / "nope.json")])
