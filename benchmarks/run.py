@@ -59,6 +59,12 @@ def _headline(name: str, rows: list) -> str:
             return "n/a"
         return (f"err={gate[0]['baseline']}->{gate[0]['residual']};"
                 f"gate_ok={gate[0]['ok']}")
+    if name == "serving":
+        gate = [x for x in rows if x["bench"] == "gate"]
+        if not gate:
+            return "n/a"
+        return (f"tokens_match={gate[0]['all_tokens_match']};"
+                f"gate_ok={gate[0]['ok']}")
     return f"rows={len(rows)}"
 
 
@@ -67,7 +73,7 @@ BENCH_NAMES = (
     "scatter_reduce", "overall_perf", "scaling", "coopt", "planner",
     "bandwidth_scaling", "alibaba", "perfmodel_accuracy", "runtime_accuracy",
     "roofline", "collectives", "trace_overhead", "fault_overhead",
-    "calibration",
+    "calibration", "serving",
 )
 
 
@@ -99,6 +105,7 @@ def main(argv=None) -> None:
         runtime_accuracy,
         scaling,
         scatter_reduce_bench,
+        serving_bench,
         trace_overhead,
     )
 
@@ -117,6 +124,7 @@ def main(argv=None) -> None:
         ("trace_overhead", trace_overhead),           # span-recording gate
         ("fault_overhead", fault_overhead),           # recovery-machinery gate
         ("calibration", calibration_bench),           # measured-profile gate
+        ("serving", serving_bench),                   # pipelined-decode gate
     ]
     # BENCH_NAMES exists so --list stays import-light; keep it honest
     assert tuple(n for n, _ in benches) == BENCH_NAMES, \

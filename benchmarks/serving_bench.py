@@ -1,0 +1,127 @@
+"""Serving gate: pipelined decode must be bit-identical to the monolithic
+decode loop, and the autoscaling simulator deterministic under a fixed seed.
+
+Plans a ``workload="serve"`` deployment for the reduced arch with
+:func:`repro.serving.plan_serving`, then runs the pipelined prefill +
+token-by-token decode through the execution backends and compares every
+token against :func:`repro.serving.reference_decode` — the single-process
+oracle running the same model monolithically.  Multi-stage pipelining is
+exercised by forcing a 2-stage split of the planned deployment (the SLO
+planner prefers 1 stage for models this small: each extra stage adds KV
+round-trips and boundary hops to *every* decoded token).  The autoscale row
+runs the bursty-arrival simulator twice at one seed and requires
+byte-identical output.
+
+``--check`` enforces the CI gate: all token parities hold and the
+autoscale table is deterministic.  Writes ``BENCH_serving.json`` at the
+repo root (``--fast`` writes ``BENCH_serving_fast.json`` and skips the
+process backend, so the tracked file is never clobbered by CI smokes).
+
+    PYTHONPATH=src python -m benchmarks.serving_bench [--fast] [--check]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.models import registry
+from repro.serving import (
+    autoscale_plan,
+    arch_config_for_model,
+    make_prompt,
+    plan_serving,
+    reference_decode,
+    run_serve_plan,
+)
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_JSON = os.path.join(_REPO_ROOT, "BENCH_serving.json")
+OUT_JSON_FAST = os.path.join(_REPO_ROOT, "BENCH_serving_fast.json")
+
+MODEL = "phi3-mini-3.8b@reduced"
+SLO_S = 60.0
+BATCH, PREFILL, NEW = 2, 16, 4
+SEED = 0
+
+
+def _parity_row(plan, backend: str, label: str, ref: np.ndarray) -> dict:
+    res = run_serve_plan(plan, backend=backend, seed=SEED)
+    kv = float((res.store_stats.class_bytes_in or {}).get("kv", 0.0))
+    return {
+        "bench": label, "backend": backend, "stages": sum(plan.x) + 1,
+        "t_request_s": round(res.t_request, 4),
+        "cost_per_1k": round(res.cost_per_1k, 6),
+        "kv_bytes_in_store": kv,
+        "tokens_match_reference": bool(np.array_equal(res.tokens, ref)),
+    }
+
+
+def rows(fast: bool = False):
+    plan = plan_serving(MODEL, "aws", slo=SLO_S, batch=BATCH,
+                        prefill_tokens=PREFILL, new_tokens=NEW)
+    # the oracle: same params + prompt seed as run_serve_plan, one process
+    cfg = arch_config_for_model(MODEL)
+    params = registry.init_params(cfg, jax.random.PRNGKey(SEED))
+    toks = make_prompt(cfg, BATCH, PREFILL, seed=SEED)
+    ref = reference_decode(cfg, params, toks, NEW)
+
+    out = [_parity_row(plan, "emulated", "decode_planned", ref)]
+    # force multi-stage pipelining: cut after the embed instance
+    plan2 = dataclasses.replace(plan, x=(0, 1, 0), z=(0, 0, 0, 0))
+    out.append(_parity_row(plan2, "emulated", "decode_2stage", ref))
+    if not fast:
+        out.append(_parity_row(plan2, "process", "decode_2stage", ref))
+
+    scale_kw = dict(rate=2.0, horizon=90.0, replicas=(1, 2, 4),
+                    arrival="bursty", seed=SEED)
+    table = [r.as_dict() for r in autoscale_plan(plan, **scale_kw)]
+    again = [r.as_dict() for r in autoscale_plan(plan, **scale_kw)]
+    deterministic = json.dumps(table) == json.dumps(again)
+    for r in table:
+        out.append({"bench": "autoscale", "replicas": r["replicas"],
+                    "requests": r["requests"], "p50_s": round(r["p50"], 4),
+                    "p95_s": round(r["p95"], 4), "p99_s": round(r["p99"], 4),
+                    "slo_violation_frac": round(r["slo_violation_frac"], 4),
+                    "cold_starts": r["cold_starts"],
+                    "cost_per_1k": round(r["cost_per_1k"], 6),
+                    "utilization": round(r["utilization"], 4)})
+
+    parities = [r["tokens_match_reference"] for r in out
+                if "tokens_match_reference" in r]
+    out.append({"bench": "gate", "decode_runs": len(parities),
+                "all_tokens_match": all(parities),
+                "autoscale_deterministic": deterministic,
+                "ok": all(parities) and deterministic})
+    with open(OUT_JSON_FAST if fast else OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def main(argv=None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(prog="benchmarks.serving_bench")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the process backend; write the _fast JSON")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 unless every pipelined decode matched the "
+                         "monolithic reference and the autoscale table is "
+                         "seed-deterministic")
+    args = ap.parse_args(argv)
+    rs = rows(fast=args.fast)
+    for r in rs:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    gate = next(r for r in rs if r["bench"] == "gate")
+    if args.check and not gate["ok"]:
+        print(f"FAIL: tokens_match={gate['all_tokens_match']} "
+              f"autoscale_deterministic={gate['autoscale_deterministic']}")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -104,6 +104,10 @@ class DeploymentPlan:
     solve_seconds: float          # provenance only; excluded from the hash
     profile_source: str = "analytic"   # provenance of the solved-against
     #                                    profile: analytic | measured
+    workload: str = "train"            # train | serve
+    serving: Optional[dict] = None     # serve-workload record (SLO, request
+    #                                    shape, latency/cost breakdown) —
+    #                                    present iff workload == "serve"
     version: int = SCHEMA_VERSION
 
     # ------------------------------------------------------------ properties
@@ -204,6 +208,10 @@ class DeploymentPlan:
         # pre-provenance plans (PR <= 8) predate profile_source; they were
         # by construction solved against analytic profiles
         d.setdefault("profile_source", "analytic")
+        # pre-serving plans (PR <= 9) predate the workload axis; every saved
+        # plan was a training plan
+        d.setdefault("workload", "train")
+        d.setdefault("serving", None)
         names = {f.name for f in dataclasses.fields(cls)}
         unknown = set(d) - names
         if unknown:
@@ -295,9 +303,21 @@ class DeploymentPlan:
                             total_micro_batches=self.total_micro_batches,
                             pipelined_sync=self.pipelined_sync)
 
+    def _require_train(self, what: str) -> None:
+        """Training-only entry points reject serve plans with a pointer at
+        the serving front door instead of mis-executing them as a 1-step
+        training run."""
+        if self.workload != "train":
+            raise PlanCompatibilityError(
+                f"{what} executes *training* plans; this plan for "
+                f"{self.model!r} has workload={self.workload!r}. Serve it "
+                "through `repro serve` / "
+                "repro.serving.run_serve_plan(plan) instead.")
+
     # ------------------------------------------------------------- execution
     def evaluate(self, **resolve_kw) -> Evaluation:
         """Closed-form performance model prediction (eq 6/7)."""
+        self._require_train("DeploymentPlan.evaluate")
         rp = self.resolve(**resolve_kw)
         return evaluate(rp.profile, rp.platform, rp.config,
                         rp.total_micro_batches,
@@ -310,6 +330,7 @@ class DeploymentPlan:
         ``SimResult.trace`` (``repro.obs.Trace``)."""
         from repro.serverless.simulator import simulate_funcpipe
 
+        self._require_train("DeploymentPlan.simulate")
         rp = self.resolve(**resolve_kw)
         return simulate_funcpipe(rp.profile, rp.platform, rp.config,
                                  rp.total_micro_batches,
@@ -340,6 +361,7 @@ class DeploymentPlan:
         from repro.serverless.execution import ExecutionConfig
         from repro.serverless.runtime import run_plan
 
+        self._require_train("DeploymentPlan.emulate")
         ec = ExecutionConfig.merge(
             exec_config,
             dict(backend=backend, steps=steps, trace=trace, faults=faults,
@@ -363,6 +385,17 @@ class DeploymentPlan:
             raise PlanCompatibilityError(str(e)) from None
         st = stages_of(self.x)
         mems = [platform.memory_options[self.z[lo]] // MB for lo, _ in st]
+        if self.workload == "serve":
+            sv = self.serving or {}
+            return (f"{self.model} on {self.platform} [serve]: {len(st)} "
+                    f"stages, mem={mems}MB, batch={sv.get('batch')}, "
+                    f"prefill={sv.get('prefill_tokens')} "
+                    f"new={sv.get('new_tokens')} tokens, "
+                    f"SLO={sv.get('slo_s')}s, predicted "
+                    f"t_request={self.t_iter:.3f}s "
+                    f"cost=${sv.get('cost_per_1k', 1000 * self.c_iter):.4f}"
+                    f"/1k-req [{self.solver}/{self.engine}, "
+                    f"hash {self.content_hash}]")
         mu = max(1, self.total_micro_batches // self.d)
         return (f"{self.model} on {self.platform}: {len(st)} stages x "
                 f"d={self.d} ({self.n_workers} workers), mem={mems}MB, "

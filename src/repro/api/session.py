@@ -94,7 +94,10 @@ class Session:
              solver: str = "cd", engine: str = "batch",
              d_options: Sequence[int] = planner.DEFAULT_D_OPTIONS,
              max_stages: Optional[int] = None, rounds: int = 100,
-             seed: int = 0) -> "Session":
+             seed: int = 0, workload: str = "train",
+             slo: Optional[float] = None, serve_batch: Optional[int] = None,
+             prefill_tokens: Optional[int] = None,
+             new_tokens: Optional[int] = None) -> "Session":
         """Co-optimize partition + resources; freeze a DeploymentPlan.
 
         ``solver``: ``cd`` / ``cd-steepest`` / ``exhaustive`` (the
@@ -104,10 +107,38 @@ class Session:
         ``dp`` (the exact cut-point DP — pair it with ``merge_to=None`` to
         plan at full layer depth).
 
+        ``workload="serve"`` switches the objective to inference serving:
+        the SLO-aware planner (:mod:`repro.serving.planner`) minimizes
+        $/1k-requests subject to ``slo`` seconds per request, with the
+        KV-cache counted in the per-stage memory constraint.  Serve plans
+        skip the plan cache (its key covers the training knobs only) and
+        replay through :func:`repro.serving.run_serve_plan`, not
+        ``emulate``/``simulate``.
+
         With a ``plan_cache`` attached to the session, the solve is keyed on
         (merged-profile fingerprint, platform, objective, M, solver knobs)
         and a verified cache hit skips the solver entirely.
         """
+        if workload == "serve":
+            from repro.serving.planner import plan_serving
+
+            if slo is None:
+                raise ValueError(
+                    "plan(workload='serve') needs slo= (seconds per request)")
+            kw = dict(slo=slo, max_stages=max_stages)
+            if serve_batch is not None:
+                kw["batch"] = serve_batch
+            if prefill_tokens is not None:
+                kw["prefill_tokens"] = prefill_tokens
+            if new_tokens is not None:
+                kw["new_tokens"] = new_tokens
+            self.deployment_plan = plan_serving(
+                self.model, self.platform, **kw)
+            self.plan_result = None
+            return self
+        if workload != "train":
+            raise ValueError(
+                f"unknown workload {workload!r}; expected train | serve")
         prof = self._require_profile()
         M = self.total_micro_batches
 

@@ -7,6 +7,8 @@
               metrics + predicted-vs-observed gap attribution
     sweep     the paper's workflow ①-⑤: Pareto frontier + recommendation +
               the §5.6 baseline algorithms (old examples/plan_serverless.py)
+    serve     SLO-aware inference serving: plan a serve partition, execute
+              pipelined decode on a backend, autoscale under arrival traces
     bench     run the paper-table benchmark modules (benchmarks/run.py)
     train     mesh/TPU training driver (delegates to repro.launch.train)
     dryrun    mesh compile-only sweep (delegates to repro.launch.dryrun)
@@ -528,6 +530,84 @@ def _cmd_sweep(args) -> int:
     return 0
 
 
+# ------------------------------------------------------------------ serve
+def _cmd_serve(args) -> int:
+    """Plan (or replay) a ``workload="serve"`` deployment; optionally run the
+    pipelined decode through a backend and/or the autoscaling simulator."""
+    from repro.api import DeploymentPlan
+    from repro.serving import autoscale_plan, plan_serving, run_serve_plan
+
+    if args.plan_file:
+        if args.model or args.slo is not None:
+            raise SystemExit(
+                "--model/--slo conflict with replaying a saved serve plan; "
+                "drop the flags (or drop the file to plan fresh)")
+        try:
+            plan = DeploymentPlan.load(args.plan_file)
+        except FileNotFoundError:
+            raise SystemExit(f"error: no such plan file: {args.plan_file}")
+    else:
+        if not args.model:
+            raise SystemExit("pass a saved serve plan.json or --model")
+        if args.slo is None:
+            raise SystemExit("--slo SECONDS is required when planning "
+                             "(the per-request latency constraint)")
+        with _operator_errors():    # unknown model/platform lookups only
+            plan = plan_serving(
+                args.model, args.platform, slo=args.slo,
+                batch=args.serve_batch, prefill_tokens=args.prefill_tokens,
+                new_tokens=args.new_tokens, max_stages=args.max_stages)
+    print(plan.describe())
+    sv = plan.serving or {}
+    if "n_feasible" in sv:
+        print(f"planner: {sv['n_feasible']} feasible candidates over "
+              f"{sv['n_candidates']} partitions; "
+              f"t_prefill={sv['t_prefill']:.3f}s "
+              f"t_token={sv['t_token'] * 1e3:.1f}ms "
+              f"kv={sum(sv['kv_bytes']) / MB:.1f}MB/stage-set")
+    if args.out:
+        plan.save(args.out)
+        print(f"wrote {args.out} (content hash {plan.content_hash})")
+
+    if args.execute:
+        res = run_serve_plan(plan, backend=args.execute, seed=args.seed,
+                             trace=bool(args.trace))
+        clock = "host wall-clock" if res.backend == "process" else "virtual"
+        print(f"serve[{res.backend}]: {res.tokens.shape[0]} request(s) x "
+              f"{res.tokens.shape[1]} tokens  t_request={res.t_request:.3f}s "
+              f"({clock})  cost=${res.cost_per_1k:.4f}/1k-req")
+        print(f"tokens: {res.tokens.tolist()}")
+        ss = res.store_stats
+        cls = ss.class_bytes_in or {}
+        per_cls = " ".join(f"{c}={cls[c] / MB:.2f}MB" for c in sorted(cls))
+        print(f"store: {ss.puts} puts / {ss.gets} gets (drained); "
+              f"uploads by key class: {per_cls or 'none'}")
+        if args.trace:
+            res.trace.save(args.trace)
+            print(f"wrote trace {args.trace} ({len(res.trace.spans)} spans)")
+
+    if args.autoscale:
+        try:
+            replicas = tuple(int(x) for x in args.autoscale.split(","))
+        except ValueError:
+            raise SystemExit(
+                f"--autoscale wants a comma list of replica counts, got "
+                f"{args.autoscale!r}")
+        rows = autoscale_plan(
+            plan, rate=args.rate, horizon=args.horizon, replicas=replicas,
+            arrival=args.arrival, trace_file=args.trace_file, seed=args.seed)
+        print(f"\nautoscale ({args.arrival} arrivals, rate={args.rate}/s, "
+              f"horizon={args.horizon}s, seed={args.seed}):")
+        print("replicas  requests      p50      p95      p99  viol%  "
+              "cold      $/1k   util")
+        for r in rows:
+            print(f"{r.replicas:>8d}  {r.requests:>8d} {r.p50:>8.3f} "
+                  f"{r.p95:>8.3f} {r.p99:>8.3f} "
+                  f"{r.slo_violation_frac:>6.1%} {r.cold_starts:>5d} "
+                  f"{r.cost_per_1k:>9.4f} {r.utilization:>6.1%}")
+    return 0
+
+
 # ---------------------------------------------------------------- inspect
 def _cmd_inspect(args) -> int:
     """Validate a saved trace and print pipeline health + gap attribution."""
@@ -830,6 +910,49 @@ def main(argv: Optional[List[str]] = None) -> int:
     p.add_argument("--save-dir", default=None,
                    help="save every swept plan JSON into this directory")
     p.set_defaults(func=_cmd_sweep)
+
+    p = sub.add_parser("serve", help="SLO-aware serving: plan, execute "
+                                     "pipelined decode, autoscale")
+    p.add_argument("plan_file", nargs="?", default=None,
+                   help="saved workload='serve' DeploymentPlan JSON "
+                        "(or pass --model + --slo to plan fresh)")
+    p.add_argument("--model", default=None,
+                   help="assigned arch id at reduced depth "
+                        "(e.g. phi3-mini-3.8b@reduced)")
+    p.add_argument("--platform", default="aws", choices=_PLATFORM_CHOICES)
+    p.add_argument("--slo", type=float, default=None, metavar="SECONDS",
+                   help="per-request latency SLO the plan must meet "
+                        "(infeasible SLOs exit with InfeasibleSLOError)")
+    p.add_argument("--serve-batch", type=int, default=1,
+                   help="requests decoded together per pipeline (default 1)")
+    p.add_argument("--prefill-tokens", type=int, default=64,
+                   help="prompt length the SLO is planned at (default 64)")
+    p.add_argument("--new-tokens", type=int, default=8,
+                   help="tokens decoded per request (default 8)")
+    p.add_argument("--max-stages", type=int, default=None)
+    p.add_argument("-o", "--out", default=None, help="write plan JSON here")
+    p.add_argument("--execute", default=None, metavar="BACKEND",
+                   help="run the pipelined prefill+decode through an "
+                        "execution backend (emulated | process) and check "
+                        "the store drains")
+    p.add_argument("--seed", type=int, default=0,
+                   help="prompt/arrival seed (default 0; deterministic)")
+    p.add_argument("--trace", default=None, metavar="OUT.json",
+                   help="with --execute: record prefill/decode spans and "
+                        "write a Chrome/Perfetto trace (see `repro inspect`)")
+    p.add_argument("--autoscale", default=None, metavar="N,N,...",
+                   help="simulate these replica counts under a seeded "
+                        "arrival trace (p50/p95/p99, SLO violations, cold "
+                        "starts, cost)")
+    p.add_argument("--rate", type=float, default=1.0,
+                   help="autoscale arrival rate, req/s (default 1.0)")
+    p.add_argument("--horizon", type=float, default=120.0,
+                   help="autoscale trace horizon, seconds (default 120)")
+    p.add_argument("--arrival", default="poisson",
+                   choices=("poisson", "bursty", "trace"))
+    p.add_argument("--trace-file", default=None, metavar="GAPS.txt",
+                   help="inter-arrival gaps file for --arrival trace")
+    p.set_defaults(func=_cmd_serve)
 
     p = sub.add_parser("bench", help="run benchmark modules (benchmarks/run.py)")
     p.add_argument("names", nargs="*", help="bench names (default: all)")

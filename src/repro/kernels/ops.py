@@ -42,6 +42,22 @@ def decode_attention(q, k_cache, v_cache, length):
     return da(q, k_cache, v_cache, length, interpret=(mode == "interpret"))
 
 
+def decode_attention_capable(*, n_q_heads: int, n_kv_heads: int,
+                             capacity: int, window: int = 0,
+                             seq_shards: int = 1) -> bool:
+    """Shape-capability probe for the flash-decode kernel: the Pallas path
+    covers the plain append-cache layout only — no rolling-window ring
+    validity, no sequence-sharded partial softmax — and needs whole-group
+    query heads plus a cache capacity the grid can tile (C % c_block == 0
+    with c_block = min(512, C)).  Callers fall back to the jnp path when
+    this returns False, so ``use_pallas`` is safe to pass for any layer."""
+    if window or seq_shards > 1:
+        return False
+    if n_kv_heads <= 0 or n_q_heads % n_kv_heads:
+        return False
+    return capacity <= 512 or capacity % 512 == 0
+
+
 def swiglu(x, w_gate, w_up):
     mode = _mode()
     orig = x.shape

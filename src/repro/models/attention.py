@@ -310,6 +310,7 @@ def attn_decode(
     cfg: ArchConfig,
     spec: LayerSpec,
     ctx: ParallelCtx = LOCAL_CTX,
+    use_pallas: bool = False,
 ) -> tuple[jax.Array, KVCache]:
     """One-token decode.  x: [B,1,d].  Returns (out [B,1,d], new cache).
 
@@ -360,6 +361,18 @@ def attn_decode(
             valid = (slots <= pos) | (pos >= C)  # ring buffer fully valid once wrapped
         else:
             valid = slots <= pos
+
+    if use_pallas and not sharded:
+        from repro.kernels import ops as kops
+
+        if kops.decode_attention_capable(
+                n_q_heads=q.shape[2], n_kv_heads=k_cache.shape[1],
+                capacity=C, window=spec.window, seq_shards=ctx.seq_shards):
+            # flash-decode kernel: one query token against the append cache;
+            # `valid = slots <= pos` is exactly `length = pos + 1`
+            o = kops.decode_attention(q[:, 0], k_cache, v_cache, pos + 1)
+            out = ctx.psum_tp(o.reshape(B, 1, -1) @ p["wo"])
+            return out, KVCache(k=k_cache, v=v_cache, cursor=cache.cursor + 1)
 
     n_rep = q.shape[2] // k_cache.shape[1]
     kk = jnp.repeat(k_cache, n_rep, axis=1)  # [B, Hq, C, hd]

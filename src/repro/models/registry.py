@@ -189,6 +189,7 @@ def decode_step(
     tokens: jax.Array,  # [B, 1] int32
     *,
     ctx: ParallelCtx = LOCAL_CTX,
+    use_pallas: bool = False,
 ):
     """One-token decode -> (logits [B,1,V], new caches)."""
     h = params["embed"][tokens]
@@ -196,7 +197,8 @@ def decode_step(
 
     def body(x, scanned):
         period_params, cache, act = scanned
-        x, new_cache = period_decode(period_params, x, cache, act, cfg=cfg, ctx=ctx)
+        x, new_cache = period_decode(period_params, x, cache, act, cfg=cfg,
+                                     ctx=ctx, use_pallas=use_pallas)
         return x, new_cache
 
     h, new_caches = jax.lax.scan(body, h, (params["layers"], caches, mask))

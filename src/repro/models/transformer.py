@@ -124,11 +124,13 @@ def period_forward(
 
 
 # ---------------------------------------------------------------------- decode
-def layer_decode(p, x, cache, active, *, cfg, spec, ctx=LOCAL_CTX):
+def layer_decode(p, x, cache, active, *, cfg, spec, ctx=LOCAL_CTX,
+                 use_pallas=False):
     h = rms_norm(x, p["norm1"], cfg.norm_eps)
     if spec.mixer == ATTN:
         mix, new_cache = attention.attn_decode(
-            p["mixer"], h, cache, cfg=cfg, spec=spec, ctx=ctx
+            p["mixer"], h, cache, cfg=cfg, spec=spec, ctx=ctx,
+            use_pallas=use_pallas,
         )
     elif spec.mixer == MAMBA:
         mix, new_cache = mamba.mamba_decode(p["mixer"], h, cache, cfg=cfg, ctx=ctx)
@@ -153,11 +155,13 @@ def layer_decode(p, x, cache, active, *, cfg, spec, ctx=LOCAL_CTX):
     return x, new_cache
 
 
-def period_decode(period_params, x, caches, active, *, cfg, ctx=LOCAL_CTX):
+def period_decode(period_params, x, caches, active, *, cfg, ctx=LOCAL_CTX,
+                  use_pallas=False):
     new_caches = []
     for j, spec in enumerate(cfg.period):
         x, c = layer_decode(
-            period_params[j], x, caches[j], active[j], cfg=cfg, spec=spec, ctx=ctx
+            period_params[j], x, caches[j], active[j], cfg=cfg, spec=spec,
+            ctx=ctx, use_pallas=use_pallas,
         )
         new_caches.append(c)
     return x, tuple(new_caches)

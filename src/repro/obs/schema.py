@@ -34,7 +34,10 @@ import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
-PHASES = ("fwd", "bwd", "sync")
+# fwd/bwd/sync are the training phases (ordering-checked below); prefill and
+# decode are the serving engine's phases — serving traces have no intra-step
+# phase-order invariant beyond lane occupancy
+PHASES = ("fwd", "bwd", "sync", "prefill", "decode")
 OPS = ("download", "compute", "upload", "barrier", "sync", "retry", "restart")
 
 # which serial worker resource a span occupies; barrier and the closed-form

@@ -500,6 +500,83 @@ class ProcessBackend(ExecutionBackend):
         return StepTiming(end=time.monotonic() - self._t0,
                           sync=max(syncs) if syncs else 0.0)
 
+    # ---------------------------------------------------------------- serving
+    def serve(self, spec: dict, *, trace_step: int = 0) -> list:
+        """Broadcast one pipelined serving request (``repro.serving``) to
+        every stage worker and collect replies.  Each child builds its
+        ``ServeStageWorker`` from ``spec`` and drives its serving program to
+        completion over the shared file store (the blocking ``take``\\ s
+        self-synchronize the pipeline); the head stage replies with the
+        greedy tokens.  Returns the head stage's token list ([B, 1] int32
+        arrays in decode order)."""
+        cmd = {"op": "serve", "spec": spec,
+               "trace": self.recorder is not None, "trace_step": trace_step}
+        errors: list = []
+        tokens: Optional[list] = None
+        pending = set(self._conns)
+        for w in list(pending):
+            try:
+                self._conns[w].send(cmd)
+            except (BrokenPipeError, OSError):
+                self._on_death(w, 0, errors, had_dying_msg=False)
+                pending.discard(w)
+        deadline = time.monotonic() + self.get_timeout + _COLLECT_SLACK
+        while pending:
+            progressed = False
+            for w in list(pending):
+                conn = self._conns[w]
+                try:
+                    has_msg = conn.poll(0.0)
+                except (BrokenPipeError, OSError):
+                    has_msg = False
+                if has_msg:
+                    try:
+                        msg = conn.recv()
+                    except EOFError:
+                        self._on_death(w, 0, errors, had_dying_msg=False)
+                        pending.discard(w)
+                        progressed = True
+                        continue
+                    if "ready" in msg:      # stale handshake; ignore
+                        progressed = True
+                        continue
+                    body = msg.get("ok") and msg or msg.get("error")
+                    if isinstance(body, dict) and self.recorder is not None:
+                        for span in body.get("spans") or ():
+                            self.recorder.spans.append(span)
+                    if msg.get("ok"):
+                        if msg.get("tokens") is not None:
+                            tokens = msg["tokens"]
+                    elif "error" in msg:
+                        d = msg["error"]
+                        cls = _errors_by_name().get(d["type"], RuntimeError)
+                        errors.append(_reconstruct_error(cls, d["msg"]))
+                    pending.discard(w)
+                    progressed = True
+                elif not self._procs[w].is_alive():
+                    if conn.poll(0.0):
+                        continue
+                    had = self._dead.get(w) is not None
+                    self._on_death(w, 0, errors, had_dying_msg=had)
+                    pending.discard(w)
+                    progressed = True
+            if pending and not progressed:
+                if time.monotonic() > deadline:
+                    who = ", ".join(f"s{s}r{r}" for s, r in sorted(pending))
+                    raise TimeoutError(
+                        "serve request wedged: no reply from worker "
+                        f"processes [{who}] within "
+                        f"{self.get_timeout + _COLLECT_SLACK:.0f}s")
+                time.sleep(0.01)
+        self._generation += 1
+        if errors:
+            raise _primary_error(errors)
+        if tokens is None:
+            raise RuntimeError(
+                "serve request produced no tokens (head stage never "
+                "replied with its sink)")
+        return tokens
+
     # --------------------------------------------------------------- recovery
     def recover(self) -> int:
         """Engine-driven relaunch: revive the poisoned store, purge residual

@@ -541,6 +541,58 @@ def _run_step(conn, store: FileStore, s: int, r: int, agg, worker, cmd,
         # worker serves the replay (its jit caches survive the recovery)
 
 
+def _run_serve(conn, store: FileStore, s: int, r: int, cmd,
+               t0: float) -> None:
+    """Drive one serving request's stage program locally (``repro.serving``):
+    build the stage's ServeStageWorker from the shipped spec and run its
+    prefill + decode program to completion over the shared store — the
+    blocking ``take``\\ s synchronize the pipeline, no barriers needed.  The
+    head stage replies with the greedy-token sink."""
+    from repro.serverless.backends.local import LocalWorkerContext
+
+    tr_spans: list = []
+    tracer = None
+    clock = None
+    if cmd["trace"]:
+        from repro.obs.schema import WorkerTracer
+
+        tracer = WorkerTracer(tr_spans, s, r)
+        tracer.step = cmd["trace_step"]
+        tracer.phase = "prefill"
+        clock = lambda: time.monotonic() - t0          # noqa: E731
+
+    ctx = LocalWorkerContext(store, tracer=tracer, clock=clock, worker=(s, r))
+    try:
+        from repro.serverless.runtime.worker import stage_instance_ranges
+        from repro.serving.engine import serve_worker_program
+        from repro.serving.worker import ServeStageWorker
+
+        spec = cmd["spec"]
+        ranges = stage_instance_ranges(spec["cfg"], spec["x"])
+        S = len(ranges)
+        sworker = ServeStageWorker(spec["cfg"], ranges[s], spec["params"],
+                                   s_ctx=spec["s_ctx"],
+                                   use_pallas=spec["use_pallas"])
+        sink: list = []
+
+        def on_decode() -> None:
+            if tracer is not None:
+                tracer.phase = "decode"
+
+        gen = serve_worker_program(
+            ctx, s=s, S=S, worker=sworker, toks=spec["toks"],
+            n_new=spec["n_new"], sink=sink, on_decode=on_decode)
+        for _ in gen:
+            pass
+        conn.send({"ok": True, "spans": tr_spans,
+                   "tokens": sink if s == S - 1 else None})
+    except BaseException as e:  # noqa: BLE001 - shipped to the parent
+        store.mark_dead((s, r))
+        store.abort(e)
+        conn.send({"error": {"type": type(e).__name__, "msg": str(e),
+                             "spans": tr_spans}})
+
+
 def worker_main(conn, init: dict) -> None:
     """Child-process entrypoint (``multiprocessing`` spawn target): build
     the stage worker, start heartbeating, then serve commands until told to
@@ -594,6 +646,8 @@ def worker_main(conn, init: dict) -> None:
         if op == "step":
             _run_step(conn, store, s, r, init["agg"], worker, cmd,
                       init["t0"])
+        elif op == "serve":
+            _run_serve(conn, store, s, r, cmd, init["t0"])
         elif op == "export_state":
             conn.send({"state": _np_tree(worker.export_state())})
         elif op == "load_state":

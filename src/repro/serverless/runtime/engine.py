@@ -223,6 +223,15 @@ def run_plan(
     plan_doc = None
     if hasattr(profile, "_as_dict") and hasattr(profile, "resolve"):
         plan_doc = profile._as_dict()
+        if plan_doc.get("workload", "train") != "train":
+            from repro.api.plan import PlanCompatibilityError
+
+            raise PlanCompatibilityError(
+                "run_plan executes *training* plans; this plan for "
+                f"{plan_doc.get('model')!r} has "
+                f"workload={plan_doc.get('workload')!r}. Serve it through "
+                "`repro serve` / repro.serving.run_serve_plan(plan) "
+                "instead.")
     profile, platform, config, total_micro_batches, pipelined_sync = \
         unpack_plan_args("run_plan", profile, platform, config,
                          total_micro_batches, pipelined_sync)

@@ -47,10 +47,15 @@ def classify_key(key: str) -> str:
     """Key class for the per-prefix byte breakdown: the engine's keys are
     ``k{k}/r{r}/m{m}/act{s}`` (forward activations), ``.../grad{s}``
     (backward boundary gradients), ``k{k}/sync{s}/part|red/...``
-    (scatter-reduce chunks — parameter-gradient traffic) and ``ckpt/s{s}``
-    (the Function Manager's store-backed stage checkpoints)."""
+    (scatter-reduce chunks — parameter-gradient traffic), ``ckpt/s{s}``
+    (the Function Manager's store-backed stage checkpoints) and ``kv/s{s}``
+    (the serving engine's per-stage KV-cache state, persisted between decode
+    tokens).  The serving boundary keys ``serve/p/act{s}`` /
+    ``serve/dec/t{t}/act{s}`` count as activations."""
     if key.startswith("ckpt/"):
         return "ckpt"
+    if key.startswith("kv/"):
+        return "kv"
     if "/part/" in key or "/red/" in key:
         return "sync"
     base = key.rsplit("/", 1)[-1]

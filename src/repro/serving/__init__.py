@@ -1,0 +1,75 @@
+"""Serverless inference serving (the training pipeline, turned around).
+
+The subsystem reuses FuncPipe's machinery for a serving objective:
+
+* :mod:`repro.serving.planner` — SLO-aware partition + memory search
+  ($/1k-requests objective, per-request latency constraint, KV-cache bytes
+  in the memory constraint), recorded as ``workload="serve"``
+  :class:`~repro.api.DeploymentPlan`\\ s;
+* :mod:`repro.serving.engine` — pipelined prefill + token-by-token decode
+  as worker programs on the execution backends (emulated virtual clocks or
+  real OS processes over the file store), KV caches persisted per stage in
+  the object store, tokens bit-identical to the monolithic decode loop;
+* :mod:`repro.serving.autoscale` — seeded bursty-arrival simulation of the
+  plan across replica counts (p50/p95/p99, SLO violations, cold starts,
+  cost).
+
+Front doors: ``Session.plan(workload="serve")``, the ``repro serve`` CLI,
+and ``benchmarks/serving_bench.py``.
+"""
+from repro.serving.autoscale import (
+    AutoscaleRow,
+    autoscale_plan,
+    bursty_arrivals,
+    poisson_arrivals,
+    simulate_replicas,
+    trace_arrivals,
+)
+from repro.serving.cost import (
+    ServingEstimate,
+    ServingSpec,
+    arch_config_for_model,
+    estimate_serving,
+    kv_bytes_per_instance,
+)
+from repro.serving.engine import (
+    SERVE_BACKENDS,
+    ServeResult,
+    make_prompt,
+    reference_decode,
+    run_serve_plan,
+    serve_worker_program,
+)
+from repro.serving.planner import (
+    InfeasibleSLOError,
+    ServingSolution,
+    plan_serving,
+    solve_serving,
+)
+from repro.serving.worker import ServeStageWorker, greedy_token
+
+__all__ = [
+    "AutoscaleRow",
+    "InfeasibleSLOError",
+    "SERVE_BACKENDS",
+    "ServeResult",
+    "ServeStageWorker",
+    "ServingEstimate",
+    "ServingSolution",
+    "ServingSpec",
+    "arch_config_for_model",
+    "autoscale_plan",
+    "bursty_arrivals",
+    "estimate_serving",
+    "greedy_token",
+    "kv_bytes_per_instance",
+    "make_prompt",
+    "plan_serving",
+    "poisson_arrivals",
+    "reference_decode",
+    "run_serve_plan",
+    "serve_worker_program",
+    "simulate_replicas",
+    "solve_serving",
+    "trace_arrivals",
+]
